@@ -1,0 +1,52 @@
+"""Data-balance and request-scheduler benchmarks: scheduling cost (host
+wall time) and balance quality at training/serving scales."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.sched.data_balance import balance_sequences, sequence_work
+from repro.sched.request_sched import ReplicaScheduler
+
+
+def seq_balance() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, dims in ((512, (8,)), (4096, (2, 16)), (16384, (2, 16, 16))):
+        lengths = rng.integers(64, 4096, size=m)
+        t0 = time.perf_counter()
+        res = balance_sequences(lengths, dims=dims)
+        us = (time.perf_counter() - t0) * 1e6
+        # imbalance of naive round-robin for comparison
+        n = int(np.prod(dims))
+        works = sequence_work(lengths)
+        rr = np.bincount(np.arange(m) % n, weights=works, minlength=n)
+        rows.append((
+            f"balance/seqs/m={m},shards={n}", us,
+            f"max_over_mean_psts={res.shard_work.max()/res.shard_work.mean():.3f};"
+            f"max_over_mean_roundrobin={rr.max()/rr.mean():.3f};"
+            f"moved={res.moved}"))
+    return rows
+
+
+def request_scheduler() -> list[tuple[str, float, str]]:
+    rows = []
+    for n_rep, n_req in ((4, 256), (16, 2048)):
+        sched = ReplicaScheduler(dims=(n_rep,))
+        rng = np.random.default_rng(1)
+        t0 = time.perf_counter()
+        for _ in range(n_req):
+            sched.submit(int(rng.integers(64, 2048)),
+                         int(rng.integers(16, 256)))
+        us = (time.perf_counter() - t0) / n_req * 1e6
+        loads = sched.loads()
+        rows.append((
+            f"balance/requests/replicas={n_rep}", us,
+            f"load_max_over_mean={loads.max()/loads.mean():.3f};"
+            f"requests={n_req}"))
+    return rows
+
+
+ALL = [seq_balance, request_scheduler]

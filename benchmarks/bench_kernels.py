@@ -1,0 +1,75 @@
+"""Kernel-layer benchmarks.
+
+This container is CPU-only, so Pallas kernels execute in interpret mode
+(correctness) and wall-times here measure the XLA reference path. The
+``derived`` column reports the kernel's structural roofline story on the
+v5e target: VMEM working set per block and the HBM-traffic ratio vs. the
+naive XLA lowering (the quantity the §Perf hillclimb banks on)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+_V5E = {"hbm": 819e9, "vmem": 128 * 2 ** 20}
+
+
+def _t(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def flash_attention_traffic() -> list[tuple[str, float, str]]:
+    rows = []
+    for b, h, s, hd, bq, bk in ((1, 8, 2048, 128, 128, 512),
+                                (1, 8, 8192, 128, 128, 512)):
+        q = jax.random.normal(jax.random.key(0), (b, h, s, hd), jnp.bfloat16)
+        k = jax.random.normal(jax.random.key(1), (b, h, s, hd), jnp.bfloat16)
+        v = jax.random.normal(jax.random.key(2), (b, h, s, hd), jnp.bfloat16)
+        us = _t(jax.jit(lambda a, b_, c: ref.flash_attention_ref(a, b_, c)),
+                q, k, v)
+        naive_bytes = b * h * s * s * 4 * 2          # logits write+read, f32
+        flash_bytes = 4 * b * h * s * hd * 2         # q,k,v,o once, bf16
+        vmem = (bq * hd + 2 * bk * hd) * 4 + bq * bk * 4
+        rows.append((
+            f"kernels/flash/s={s}", us,
+            f"traffic_ratio_naive_over_flash={naive_bytes/flash_bytes:.1f};"
+            f"vmem_block_bytes={vmem};fits_vmem={vmem < _V5E['vmem']}"))
+    return rows
+
+
+def prefix_scan_cost() -> list[tuple[str, float, str]]:
+    rows = []
+    for rows_, n in ((8, 4096), (64, 65536)):
+        x = jax.random.normal(jax.random.key(3), (rows_, n))
+        us = _t(jax.jit(ref.prefix_scan_ref), x)
+        rows.append((f"kernels/prefix_scan/n={n}", us,
+                     f"bytes={x.size*4*2};ideal_v5e_us="
+                     f"{x.size*4*2/_V5E['hbm']*1e6:.2f}"))
+    return rows
+
+
+def mamba_scan_cost() -> list[tuple[str, float, str]]:
+    rows = []
+    b, s, n, di = 1, 2048, 16, 1024
+    da = jnp.asarray(np.random.default_rng(0).uniform(
+        0.8, 1.0, (b, s, n, di)), jnp.float32)
+    dbx = jax.random.normal(jax.random.key(4), (b, s, n, di))
+    us = _t(jax.jit(ref.mamba_scan_ref), da, dbx)
+    hbm_bytes = da.size * 4 * 3                      # da, dbx in; h out
+    rows.append((f"kernels/mamba_scan/s={s}", us,
+                 f"bytes={hbm_bytes};ideal_v5e_us="
+                 f"{hbm_bytes/_V5E['hbm']*1e6:.1f}"))
+    return rows
+
+
+ALL = [flash_attention_traffic, prefix_scan_cost, mamba_scan_cost]

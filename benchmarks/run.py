@@ -1,0 +1,65 @@
+"""Benchmark driver. One function per paper table/figure, plus framework
+benchmarks (dispatch, kernels, data balance). Prints ``name,us_per_call,
+derived`` CSV.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only SUBSTR]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def _suites():
+    from . import bench_paper
+    suites = [("paper", bench_paper.ALL)]
+    try:
+        from . import bench_dispatch
+        suites.append(("dispatch", bench_dispatch.ALL))
+    except ImportError:
+        pass
+    try:
+        from . import bench_kernels
+        suites.append(("kernels", bench_kernels.ALL))
+    except ImportError:
+        pass
+    try:
+        from . import bench_balance
+        suites.append(("balance", bench_balance.ALL))
+    except ImportError:
+        pass
+    try:
+        from . import bench_ablation
+        suites.append(("ablation", bench_ablation.ALL))
+    except ImportError:
+        pass
+    return suites
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--only", default="", help="substring filter on name")
+    args = parser.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite_name, fns in _suites():
+        for fn in fns:
+            if args.only and args.only not in f"{suite_name}/{fn.__name__}":
+                continue
+            try:
+                for name, us, derived in fn():
+                    print(f"{name},{us:.1f},{derived}")
+            except Exception:
+                failures += 1
+                print(f"{suite_name}/{fn.__name__},NaN,ERROR",
+                      file=sys.stderr)
+                traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Elastic training: a host dies mid-run; the monitor declares it a virtual
+node (tau = 0), PSTS re-balances the input pipeline onto survivors, training
+resumes from the last checkpoint with an elastic mesh.
+
+Run: PYTHONPATH=src python examples/elastic_failover.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DocStream, Pipeline
+from repro.launch.mesh import elastic_shape
+from repro.models import LM
+from repro.optim import AdamW, warmup_cosine
+from repro.sched.data_balance import balance_sequences
+from repro.sched.straggler import StragglerMonitor
+from repro.train import LoopConfig, train
+
+
+def main():
+    cfg = get_config("olmo-1b").smoke()
+    lm = LM(cfg)
+    n_hosts = 4
+    monitor = StragglerMonitor(n_hosts=n_hosts, heartbeat_limit=2)
+    stream = DocStream(vocab_size=cfg.vocab_size, mean_len=48, max_len=96,
+                       seed=0)
+    pipe = Pipeline(stream, shard_dims=(n_hosts,), rows_per_shard=2,
+                    seq_len=96, monitor=monitor)
+    opt = AdamW()
+    sch = warmup_cosine(2e-3, 10, 80)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # phase 1: healthy cluster, 40 steps with checkpoints
+        loop = LoopConfig(steps=40, ckpt_dir=ckpt_dir, ckpt_every=20,
+                          remat=False)
+        state, hist = train(lm, opt, sch, pipe, loop, monitor=monitor)
+        print(f"phase 1 done at step {int(state.opt.step)}, "
+              f"loss {hist[-1]['loss']:.3f}")
+
+        # host 3 stops heart-beating -> virtual node
+        for _ in range(3):
+            monitor.update({0: 1.0, 1: 1.0, 2: 1.1})
+        tau = monitor.powers()
+        print(f"host 3 died: powers -> {np.round(tau, 2).tolist()}")
+
+        # PSTS drains the dead shard in the input pipeline
+        lengths = np.array([len(stream.doc(i).tokens) for i in range(64)])
+        res = balance_sequences(lengths, dims=(n_hosts,), powers=tau)
+        print(f"rebalanced 64 docs: per-shard work "
+              f"{np.round(res.shard_work, 0).tolist()} (dead shard gets 0)")
+
+        # elastic mesh plan for the survivors (device-level view)
+        data, model = elastic_shape(6, model_parallel=2)  # 8 -> 6 survivors
+        print(f"elastic re-mesh plan: data={data} model={model} "
+              f"({data * model} of 6 surviving devices used)")
+
+        # phase 2: resume from checkpoint and keep training on survivors
+        loop2 = LoopConfig(steps=80, ckpt_dir=ckpt_dir, ckpt_every=20,
+                           remat=False)
+        state2, hist2 = train(lm, opt, sch, pipe, loop2, monitor=monitor)
+        print(f"phase 2 resumed at step {hist2[0]['step']} and finished at "
+              f"{int(state2.opt.step)}, loss {hist2[-1]['loss']:.3f}")
+        assert hist2[0]["step"] == 40  # resumed, not restarted
+
+
+if __name__ == "__main__":
+    main()

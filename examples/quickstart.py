@@ -1,0 +1,63 @@
+"""Quickstart: the paper's algorithm end-to-end on a simulated cluster.
+
+Reproduces the flow of the worked example (paper section 4.2) at cluster
+scale: build a heterogeneous cluster, skew the load, consult the crossover
+trigger, run PSTS, verify power-proportional balance.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    CrossoverTrigger,
+    embed,
+    optimal_dim,
+    psts_schedule,
+    SimConfig,
+    simulate,
+)
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # --- a 24-node heterogeneous cluster, embedded at the paper-optimal dim
+    n = 24
+    powers = rng.integers(1, 10, size=n).astype(float)
+    grid = embed(powers)
+    print(f"cluster: {n} nodes, powers 1..10, optimal dim "
+          f"{optimal_dim(n)} -> hyper-grid {grid.dims} "
+          f"({grid.capacity - n} virtual nodes)")
+
+    # --- 4000 tasks (the paper's workload), skewed onto 3 gateway nodes
+    m = 4000
+    works = rng.integers(1, 4, size=m).astype(float)
+    active = np.nonzero(grid.active)[0]
+    node = active[rng.choice([0, 1, 2], size=m)]
+    loads = np.bincount(node, weights=works, minlength=grid.capacity)
+
+    # --- crossover trigger (paper section 5): is rebalancing worth it?
+    trig = CrossoverTrigger(grid, p=1e-4, q=1e-5, t_task=1e-4, floor=0.02)
+    dec = trig.evaluate(loads, m_tasks=m)
+    print(f"imbalance {dec.imbalance:8.3f} vs crossover {dec.crossover:.5f}"
+          f" -> trigger={dec.trigger}")
+
+    # --- PSTS (paper algorithm 2)
+    res = psts_schedule(works, node, grid)
+    after = trig.evaluate(res.loads_after, m_tasks=m)
+    print(f"after PSTS: imbalance {after.imbalance:.4f}, "
+          f"moved {res.moved_tasks} tasks ({res.moved_units:.0f} units), "
+          f"inter-grid units per level: {res.inter_grid_units}")
+    worst = np.abs(res.loads_after - res.targets).max()
+    print(f"max |load - power-proportional target| = {worst:.1f} work units"
+          f" (task indivisibility bound: {works.max():.0f})")
+
+    # --- the paper's headline experiment in one line (Fig. 6 point)
+    sim = simulate(SimConfig(n_nodes=32, d=optimal_dim(32), seed=1))
+    print(f"simulated 32-node run: speedup {sim.speedup:.2f}x, "
+          f"overhead {sim.overhead:.1f}s, crossover {sim.crossover:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — PSTS (Positional Scan Task Scheduling) as a first-class feature
+of a multi-pod JAX training/serving framework.
+
+Paper: "Dynamic Task Scheduling in Computing Cluster Environments",
+Savvas & Kechadi. See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: atomic sharded-pytree save/restore, async writer."""
+
+from .ckpt import Checkpointer, latest_step, restore, save, save_async
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save", "save_async"]

@@ -1,0 +1,152 @@
+"""Checkpointing: sharded-pytree save/restore with an async writer.
+
+Format: one directory per step containing
+  manifest.msgpack — tree structure, shapes, dtypes, step, user metadata,
+                     and a content hash per leaf (restore validates them)
+  arrays.npz       — the leaves, keyed by flattened path
+
+Writes go to ``<dir>/tmp.<step>`` and are atomically renamed, so a killed
+writer never corrupts the latest checkpoint (restart-safety on preemption).
+``save_async`` hands the work to a background thread — the train loop keeps
+stepping while the previous state serialises. ``keep_last`` prunes history.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import msgpack
+import numpy as np
+
+import jax
+
+__all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer"]
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def _leaf_hash(a: np.ndarray) -> str:
+    return hashlib.sha256(a.tobytes()).hexdigest()[:16]
+
+
+def save(directory: str, step: int, tree, metadata: dict | None = None,
+         keep_last: int | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **leaves)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                     "hash": _leaf_hash(v)} for k, v in leaves.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    if keep_last:
+        _prune(directory, keep_last)
+    return final
+
+
+def _prune(directory: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, tree_like, step: int | None = None,
+            validate: bool = True):
+    """Restore into the structure of ``tree_like`` (shape/dtype checked).
+    Returns (step, tree, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    want, treedef = _flatten(tree_like)
+    leaves = []
+    for key in want:
+        if key not in manifest["keys"]:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        meta = manifest["keys"][key]
+        if list(arr.shape) != meta["shape"]:
+            raise ValueError(f"{key}: stored shape {arr.shape} != manifest")
+        if validate and _leaf_hash(arr) != meta["hash"]:
+            raise ValueError(f"{key}: content hash mismatch (corrupt ckpt)")
+        if tuple(arr.shape) != want[key].shape or \
+                str(arr.dtype) != str(want[key].dtype):
+            raise ValueError(
+                f"{key}: ckpt {arr.shape}/{arr.dtype} != model "
+                f"{want[key].shape}/{want[key].dtype}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return manifest["step"], tree, manifest["metadata"]
+
+
+class Checkpointer:
+    """Async wrapper: one background writer, one in-flight save at a time
+    (a second request waits — bounded memory)."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="ckpt")
+        self._lock = threading.Lock()
+        self._last: Future | None = None
+
+    def save_async(self, step: int, tree, metadata: dict | None = None
+                   ) -> Future:
+        host_tree = jax.tree.map(np.asarray, tree)  # device -> host now
+        with self._lock:
+            if self._last is not None:
+                self._last.result()  # backpressure
+            self._last = self._pool.submit(
+                save, self.directory, step, host_tree, metadata,
+                self.keep_last)
+            return self._last
+
+    def wait(self):
+        with self._lock:
+            if self._last is not None:
+                self._last.result()
+
+    def restore_latest(self, tree_like):
+        self.wait()
+        return restore(self.directory, tree_like)
+
+
+def save_async(directory: str, step: int, tree, **kw) -> Future:
+    return Checkpointer(directory).save_async(step, tree, **kw)

@@ -1,0 +1,24 @@
+"""qwen1.5-32b [dense] — MHA with QKV bias.
+
+64L d_model=5120 40H (kv=40) d_ff=27392 vocab=152064. [hf:Qwen/Qwen1.5; hf]
+Notes: 40 heads do not divide the 16-way model axis; attention activations
+stay batch-sharded. The MHA KV cache at decode_32k x batch 128 is 20.4
+GiB/chip in bf16 — over the v5e budget — so serving uses an fp8 cache
+(10.2 GiB; EXPERIMENTS §Dry-run).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    kv_cache_dtype="float8_e4m3fn",
+    source="[hf:Qwen/Qwen1.5-0.5B; hf]",
+)

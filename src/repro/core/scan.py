@@ -1,0 +1,110 @@
+"""Prefix-scan primitives — the paper's core operator (Definition 3.1).
+
+The paper builds everything on the exclusive additive scan ``(+, A)``:
+load scans ``S = (+, L)`` and normalised-power scans ``lambda = (+, gamma)``.
+This module provides
+
+* host-side exact scans (numpy, used by the host schedulers),
+* in-core JAX scans (``jnp``/``lax``, used inside jitted dispatch),
+* a cross-device scan ladder (``axis_exclusive_scan``) usable inside
+  ``shard_map`` along a mesh axis — the TPU-native realisation of the paper's
+  1-D hyper-grid scan (a log-depth Hillis-Steele ``ppermute`` ladder instead
+  of the paper's ``2(n-1)``-step bus walk; see DESIGN.md section 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "exclusive_scan_np",
+    "inclusive_scan_np",
+    "exclusive_scan",
+    "inclusive_scan",
+    "segment_positions",
+    "axis_exclusive_scan",
+    "axis_inclusive_scan",
+]
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) scans — exact integer arithmetic for the host schedulers.
+# ---------------------------------------------------------------------------
+
+def exclusive_scan_np(a: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Exclusive additive scan: ``[0, a0, a0+a1, ...]`` (paper Def. 3.1)."""
+    a = np.asarray(a)
+    if a.size == 0:
+        return np.zeros_like(a, dtype=np.result_type(a, np.float64)
+                             if a.dtype.kind != "f" else a.dtype)
+    out = np.cumsum(a, axis=axis)
+    out = np.roll(out, 1, axis=axis)
+    idx = [slice(None)] * out.ndim
+    idx[axis if axis >= 0 else out.ndim + axis] = 0
+    out[tuple(idx)] = 0
+    return out
+
+
+def inclusive_scan_np(a: np.ndarray, axis: int = -1) -> np.ndarray:
+    return np.cumsum(np.asarray(a), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# In-core JAX scans.
+# ---------------------------------------------------------------------------
+
+def exclusive_scan(a: jax.Array, axis: int = -1) -> jax.Array:
+    """Exclusive additive scan along ``axis`` (jnp)."""
+    inc = jnp.cumsum(a, axis=axis)
+    return inc - a
+
+
+def inclusive_scan(a: jax.Array, axis: int = -1) -> jax.Array:
+    return jnp.cumsum(a, axis=axis)
+
+
+def segment_positions(segment_onehot: jax.Array) -> jax.Array:
+    """Position of each element within its segment, given one-hot membership.
+
+    ``segment_onehot``: (items, segments) 0/1. Returns (items, segments) where
+    entry (i, s) is the number of earlier items in segment s — the per-segment
+    exclusive scan the paper uses to index work units within a hyper-grid.
+    """
+    return exclusive_scan(segment_onehot, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Cross-device scan along a mesh axis (for use inside shard_map).
+# ---------------------------------------------------------------------------
+
+def axis_exclusive_scan(x: jax.Array, axis_name: str, axis_size: int):
+    """Exclusive prefix sum of per-device values across a mesh axis.
+
+    Hillis-Steele doubling with ``ppermute``: ``ceil(log2(n))`` steps, the
+    TPU-native version of the paper's 1-D hyper-grid scan. Also returns the
+    total (what the paper's "rightmost node broadcast" provides).
+
+    Must be called inside ``shard_map`` with ``axis_name`` bound. ``axis_size``
+    must be the static mesh-axis size.
+
+    Returns ``(exclusive, total)``.
+    """
+    if axis_size == 1:
+        return jnp.zeros_like(x), x
+    inc = x
+    shift = 1
+    while shift < axis_size:
+        # send partial sums "rightwards" by `shift`; unpaired receivers get 0
+        perm = [(i, i + shift) for i in range(axis_size - shift)]
+        inc = inc + jax.lax.ppermute(inc, axis_name, perm)
+        shift *= 2
+    exclusive = inc - x
+    total = jax.lax.psum(x, axis_name)
+    return exclusive, total
+
+
+def axis_inclusive_scan(x: jax.Array, axis_name: str, axis_size: int):
+    exc, total = axis_exclusive_scan(x, axis_name, axis_size)
+    return exc + x, total

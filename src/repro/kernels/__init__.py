@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+  prefix_scan     — the paper's scan operator, blocked with VMEM carry
+  psts_dispatch   — fused PSTS dispatch position computation
+  flash_attention — GQA causal/window online-softmax attention
+  mamba_scan      — blocked selective-scan recurrence
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .mamba_scan import mamba_scan_pallas
+from .prefix_scan import prefix_scan_pallas
+from .psts_dispatch import dispatch_positions_pallas
+
+__all__ = ["ops", "ref", "flash_attention_pallas", "mamba_scan_pallas",
+           "prefix_scan_pallas", "dispatch_positions_pallas"]

@@ -1,0 +1,61 @@
+"""Public jit'd kernel API with backend selection.
+
+``backend='auto'`` uses the Pallas kernel on TPU, the pure-jnp reference
+elsewhere (this CPU container lowers/compiles the reference path; kernels are
+validated in interpret mode by the test suite). ``backend='pallas'`` forces
+the kernel (interpret=True off-TPU), ``backend='ref'`` forces the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .mamba_scan import mamba_scan_pallas
+from .prefix_scan import prefix_scan_pallas
+from .psts_dispatch import dispatch_positions_pallas
+
+__all__ = ["prefix_scan", "dispatch_positions", "flash_attention",
+           "mamba_scan", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str):
+    if backend == "auto":
+        return "pallas" if on_tpu() else "ref"
+    return backend
+
+
+def prefix_scan(x, backend: str = "auto", **kw):
+    if _resolve(backend) == "pallas":
+        return prefix_scan_pallas(x, interpret=not on_tpu(), **kw)
+    return ref.prefix_scan_ref(x)
+
+
+def dispatch_positions(expert_idx, base, n_experts: int,
+                       backend: str = "auto", **kw):
+    if _resolve(backend) == "pallas":
+        return dispatch_positions_pallas(expert_idx, base,
+                                         n_experts=n_experts,
+                                         interpret=not on_tpu(), **kw)
+    return ref.dispatch_positions_ref(expert_idx, base, n_experts)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    backend: str = "auto", **kw):
+    if _resolve(backend) == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap,
+                                      interpret=not on_tpu(), **kw)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+
+
+def mamba_scan(da, dbx, backend: str = "auto", **kw):
+    if _resolve(backend) == "pallas":
+        return mamba_scan_pallas(da, dbx, interpret=not on_tpu(), **kw)
+    return ref.mamba_scan_ref(da, dbx)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused PSTS dispatch position computation.
+
+Computes, for a stream of routed tokens, each token's exclusive position
+within its destination expert (the paper's per-node load scan ``S``) plus the
+final per-expert fill counts — in one pass, without materialising the (T, E)
+one-hot matrix in HBM (it lives blockwise in VMEM).
+
+Grid = (token blocks,) iterated sequentially; the running fill count per
+expert rides a VMEM scratch. Expert axis padded to the 128 lane width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dispatch_positions_pallas"]
+
+_LANES = 128
+
+
+def _dispatch_kernel(e_ref, base_ref, pos_ref, fill_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = base_ref[...].astype(jnp.int32)
+
+    e = e_ref[...]                                   # (bt, 1) int32
+    eids = jax.lax.broadcasted_iota(jnp.int32, (e.shape[0], _LANES), 1)
+    onehot = (e == eids).astype(jnp.int32)           # (bt, E_pad) in VMEM
+    cum = jnp.cumsum(onehot, axis=0) - onehot        # exclusive scan
+    acc = acc_ref[...]                               # (1, E_pad)
+    pos = ((cum + acc) * onehot).sum(axis=1, keepdims=True)
+    pos_ref[...] = pos
+    acc_ref[...] = acc + onehot.sum(axis=0, keepdims=True)
+    fill_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_experts", "block_tokens", "interpret"))
+def dispatch_positions_pallas(expert_idx: jax.Array, base: jax.Array, *,
+                              n_experts: int, block_tokens: int = 256,
+                              interpret: bool = True):
+    """expert_idx: (T,) int32 destination per token; base: (E,) already
+    filled. Returns (positions (T,), fill (E,)) — fill includes base."""
+    t = expert_idx.shape[0]
+    if n_experts > _LANES:
+        raise NotImplementedError(
+            f"expert axis > {_LANES} needs a second lane tile")
+    block_tokens = min(block_tokens, t)
+    pad_t = -t % block_tokens
+    e = jnp.pad(expert_idx.astype(jnp.int32), (0, pad_t),
+                constant_values=-1)[:, None]          # (Tp, 1)
+    base_p = jnp.pad(base.astype(jnp.int32),
+                     (0, _LANES - n_experts))[None, :]  # (1, E_pad)
+    grid = (e.shape[0] // block_tokens,)
+    pos, fill = pl.pallas_call(
+        _dispatch_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_tokens, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((1, _LANES), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((block_tokens, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, _LANES), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((e.shape[0], 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, _LANES), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, _LANES), jnp.int32)],
+        interpret=interpret,
+    )(e, base_p)
+    return pos[:t, 0], fill[0, :n_experts]

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth — the
+model layers use the same implementations, so a kernel validated against
+these is validated against the training/serving numerics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["prefix_scan_ref", "dispatch_positions_ref",
+           "flash_attention_ref", "mamba_scan_ref"]
+
+
+def prefix_scan_ref(x: jax.Array) -> jax.Array:
+    """Exclusive cumsum along the last axis."""
+    return jnp.cumsum(x, axis=-1) - x
+
+
+def dispatch_positions_ref(expert_idx: jax.Array, base: jax.Array,
+                           n_experts: int):
+    """Per-token exclusive position within its expert + final fills.
+
+    expert_idx: (T,) int32; base: (E,). Matches
+    ``sched.moe_dispatch._positions_in_expert``.
+    """
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    pos = ((cum + base[None, :].astype(jnp.int32)) * onehot).sum(axis=-1)
+    fill = base.astype(jnp.int32) + onehot.sum(axis=0)
+    return pos, fill
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """Full-materialisation attention. q: (B,H,S,hd); k/v: (B,KV,S,hd)."""
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=1)
+    vf = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * hd ** -0.5
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (i >= j)
+    if window is not None:
+        mask = mask & ((i - j) < window)
+    logits = jnp.where(mask[None, None], logits, -2.0 ** 30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(da, dbx):
+    """h_t = da_t * h_{t-1} + dbx_t over axis 1. da/dbx: (B,S,N,di)."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(
+        combine, (da.astype(jnp.float32), dbx.astype(jnp.float32)), axis=1)
+    return h

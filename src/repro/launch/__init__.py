@@ -1,0 +1,10 @@
+"""Launch layer: production meshes, sharding plans, multi-pod dry-run,
+roofline analysis, train/serve CLIs.
+
+NOTE: do not import ``dryrun`` from library code — it sets
+XLA_FLAGS (512 placeholder devices) at import time by design.
+"""
+
+from .mesh import elastic_mesh, make_production_mesh, mesh_axis_sizes
+
+__all__ = ["elastic_mesh", "make_production_mesh", "mesh_axis_sizes"]

@@ -1,0 +1,150 @@
+"""Roofline analysis from the compiled dry-run artifact (EXPERIMENTS
+sections Roofline / Perf).
+
+Three terms per (arch x shape x mesh), in seconds per step on the TPU v5e
+target (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  compute    = HLO_FLOPs / peak_FLOPs          (per-device module)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective operand bytes / link_bw
+
+``cost_analysis`` supplies FLOPs/bytes of the per-device SPMD module;
+collective bytes are parsed from the compiled HLO text (operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (inference)
+gives the useful-compute ratio that catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["HW", "collective_stats", "model_flops", "roofline_report"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 / chip
+    "hbm_bw": 819e9,        # bytes/s
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# optimized dumps don't inline operand types; parse the RESULT shape:
+# '%all-gather.80 = f32[512,2048]{0,1} all-gather(%fusion.3), replica_...'
+_OP_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLL_KINDS) + r")(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:  # iota form: [n_groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit list: size of the first group
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device bytes moved on the ICI/DCN wire, per collective kind.
+
+    Convention (ring algorithms, g = group size):
+      all-gather        : receives (g-1)/g of the result       ~ result
+      reduce-scatter    : sends (g-1)/g of the input = (g-1) x result
+      all-reduce        : RS + AG on the operand                ~ 2 x result
+      all-to-all        : re-sends (g-1)/g of the buffer        ~ result
+      collective-permute: result bytes
+    """
+    by_kind: dict[str, dict] = {k: {"count": 0, "bytes": 0}
+                                for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        res = _shape_bytes(dtype, dims)
+        g = _group_size(line)
+        if kind == "all-gather":
+            moved = res * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = res * (g - 1)
+        elif kind == "all-reduce":
+            moved = 2 * res * (g - 1) / g
+        elif kind == "all-to-all":
+            moved = res * (g - 1) / g
+        else:  # collective-permute
+            moved = res
+        by_kind[kind]["count"] += 1
+        by_kind[kind]["bytes"] += int(moved)
+    total_bytes = sum(v["bytes"] for v in by_kind.values())
+    total_count = sum(v["count"] for v in by_kind.values())
+    return {"total_bytes": total_bytes, "total_count": total_count,
+            "by_kind": {k: v for k, v in by_kind.items() if v["count"]}}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference forward."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.prefix_len:
+            tokens += shape.global_batch * cfg.prefix_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_report(record: dict, cfg, shape) -> dict:
+    corr = record.get("corrected")
+    if corr:
+        flops_dev = corr["flops"]
+        bytes_dev = corr["bytes_accessed"]
+        coll_dev = corr["collective_bytes"]
+    else:
+        flops_dev = float(record["cost"]["flops"] or 0.0)
+        bytes_dev = float(record["cost"]["bytes_accessed"] or 0.0)
+        coll_dev = float(record["collectives"]["total_bytes"])
+    n_dev = record["n_devices"]
+    compute_s = flops_dev / HW["peak_flops"]
+    memory_s = bytes_dev / HW["hbm_bw"]
+    coll_s = coll_dev / HW["link_bw"]
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops_dev * n_dev, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # memory-bound cells (decode): efficiency against the bandwidth roofline
+    # — the state (params + cache) must be read at least once per step
+    min_bytes = float(record["memory"]["args_bytes"])
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_compute_ratio": useful,
+        # fraction of the roofline the useful compute achieves if the step
+        # ran exactly at the dominant-term time
+        "roofline_fraction": (mf / n_dev / HW["peak_flops"]) / max(bound,
+                                                                   1e-12),
+        # bandwidth roofline: minimum necessary traffic / modeled traffic
+        "bandwidth_fraction": min_bytes / max(bytes_dev, 1.0),
+    }

@@ -1,0 +1,282 @@
+"""Sharding plans: logical-axis rules + parameter/optimizer/batch/cache
+PartitionSpecs for every (config x mesh x shape) cell.
+
+Layout (DESIGN.md section 5):
+  * params: 2-D sharded — FSDP dim over ``data``, TP dim over ``model``;
+    replicated across ``pod`` (pod = DP over DCN),
+  * optimizer moments: FSDP dim over ``(pod, data)`` (ZeRO-1 across pods —
+    grok-314B f32 moments drop to 4.9 GiB/chip at 512 chips),
+  * activations: logical names resolved per-config (heads shard over
+    ``model`` only when the head count divides it — qwen's 40 heads and
+    gemma's 8 stay batch-sharded, noted in EXPERIMENTS),
+  * decode KV caches: sequence dim over ``model`` (KV head counts mostly
+    don't divide 16); ``long_500k`` (batch=1) additionally spreads the
+    sequence over ``(data, model)``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models.attention import KVCache
+from ..models.ssm import SSMCache
+from .mesh import mesh_axis_sizes
+
+__all__ = ["activation_rules", "param_pspecs", "moment_pspecs",
+           "batch_pspecs", "cache_pspecs", "named", "state_pspecs"]
+
+
+def _fit(dim: int, size: int, axis):
+    """Use ``axis`` only if it divides the dimension."""
+    return axis if dim % size == 0 else None
+
+
+def _axes(mesh):
+    return mesh_axis_sizes(mesh)
+
+
+def moe_layout(cfg: ModelConfig, ax: dict) -> dict:
+    """Where the MoE data path lives (shared by param specs and activation
+    rules; see EXPERIMENTS §Perf "granite probe" for the motivation —
+    contraction dims sharded against an unsharded operand force
+    activation-sized all-reduces, 9.3 TB/step on granite).
+
+      e_ax       — axis carrying the expert dim: dedicated ``expert`` axis
+                   if present & divisible, else ``model`` if divisible,
+                   else None (legacy 2-D weight sharding; grok on the
+                   default mesh — fixed by the EP mesh variant),
+      act_ff     — axis sharding the *activation* hidden dim h (disjoint
+                   from e_ax and the group axes),
+      weight_ff  — axes sharding the *weight* ff dim (act_ff + data-FSDP;
+                   the data part is gathered per layer at use),
+      group_axes — axes sharding the token-group dim of (G, E, C, d).
+    """
+    if not cfg.n_experts:
+        return {"e_ax": None, "act_ff": None, "weight_ff": None,
+                "group_axes": None, "legacy": False}
+    if cfg.moe_layout_mode == "legacy":
+        return {"e_ax": None, "act_ff": None, "weight_ff": None,
+                "group_axes": None, "legacy": True}
+    if "expert" in ax and cfg.n_experts % ax["expert"] == 0:
+        e_ax = "expert"
+        group_axes = tuple(a for a in ("data",) if a in ax) or None
+        act_ff = _fit(cfg.d_ff, ax["model"], "model")
+        wf = [a for a in ("data", "model") if a in ax]
+        weight_ff = tuple(wf) if cfg.d_ff % int(
+            np.prod([ax[a] for a in wf])) == 0 else act_ff
+    elif cfg.n_experts % ax["model"] == 0:
+        e_ax = "model"
+        group_axes = tuple(a for a in ("pod", "data") if a in ax)
+        act_ff = None                    # data carries groups, model experts
+        weight_ff = _fit(cfg.d_ff, ax["data"], "data")
+    else:
+        return {"e_ax": None, "act_ff": None, "weight_ff": None,
+                "group_axes": None, "legacy": True}
+    return {"e_ax": e_ax, "act_ff": act_ff, "weight_ff": weight_ff,
+            "group_axes": group_axes, "legacy": False}
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation_rules(cfg: ModelConfig, mesh, shape: ShapeSpec | None = None
+                     ) -> dict[str, Any]:
+    ax = _axes(mesh)
+    model = ax["model"]
+    batch_axes = tuple(a for a in ("pod", "expert", "data") if a in ax)
+    batch_size = int(np.prod([ax[a] for a in batch_axes]))
+    rules: dict[str, Any] = {
+        "batch": batch_axes if (shape is None
+                                or shape.global_batch % batch_size == 0)
+        else None,
+        "ff": "model",
+        "vocab": "model",
+        "heads": _fit(cfg.n_heads or 1, model, "model"),
+        "kv_heads": _fit(cfg.n_kv_heads or 1, model, "model"),
+        "heads_flat": _fit((cfg.n_heads or 1) * cfg.head_dim_ or 1, model,
+                           "model"),
+    }
+    # expert parallelism for the MoE data path (DESIGN.md section 5)
+    layout = moe_layout(cfg, ax)
+    rules["experts"] = layout["e_ax"]
+    rules["moe_group"] = layout["group_axes"]
+    rules["moe_ff"] = layout["act_ff"]
+    if layout["legacy"]:
+        # legacy path: groups over the batch axes, h over model (matches
+        # the (None, data, model) weight sharding)
+        rules["moe_group"] = rules["batch"]
+        rules["moe_ff"] = "model"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _base_spec(path: str, shape: tuple[int, ...], ax: dict,
+               cfg: ModelConfig | None = None) -> P:
+    """Spec for one parameter leaf, before the stacked-stage leading dim."""
+    d_ax, m_ax = ax["data"], ax["model"]
+
+    def fd(i):  # fit data
+        return _fit(shape[i], d_ax, "data")
+
+    def fm(i):  # fit model
+        return _fit(shape[i], m_ax, "model")
+
+    def expert_spec(up_proj: bool) -> P:
+        """Expert weights — wi/wg: (E, d, ff); wo: (E, ff, d)."""
+        layout = moe_layout(cfg, ax)
+        if layout["legacy"] or layout["e_ax"] is None:
+            return (P(None, fd(1), fm(2)) if up_proj
+                    else P(None, fm(1), fd(2)))
+        e_ax, wff = layout["e_ax"], layout["weight_ff"]
+        return (P(e_ax, None, wff) if up_proj else P(e_ax, wff, None))
+
+    if path.endswith("embed/w"):                    # (V, d)
+        # vocab over model, d replicated: the take() lowers to mask+psum
+        # instead of involuntary replication (and the tied-unembed matmul is
+        # then fully local until the loss psum)
+        return P(fm(0), None)
+    if path.endswith("unembed/w"):                  # (d, V)
+        return P(None, fm(1))
+    if path.endswith("prefix_proj/w"):              # (pd, d)
+        return P(fd(0), None)
+    if "router/w" in path:                          # (d, E)
+        return P(fd(0), None)
+    if "/moe/" in path and path.endswith(("wi", "wg")):   # (E, d, ff)
+        return expert_spec(up_proj=True)
+    if "/moe/" in path and path.endswith("wo"):           # (E, ff, d)
+        return expert_spec(up_proj=False)
+    if path.endswith(("wq/w", "wk/w", "wv/w", "wi/w", "wg/w", "in_proj/w")):
+        return P(fd(0), fm(1))                      # (d, X): FSDP x TP
+    if path.endswith(("wq/b", "wk/b", "wv/b", "wi/b", "wg/b")):
+        return P(fm(0))
+    if path.endswith(("wo/w", "out_proj/w")):       # (X, d)
+        return P(fm(0), fd(1))
+    if path.endswith("x_proj/w"):                   # (di, dr+2N)
+        return P(fm(0), None)
+    if path.endswith("dt_proj/w"):                  # (dr, di)
+        return P(None, fm(1))
+    if path.endswith("conv_w"):                     # (K, di)
+        return P(None, fm(1))
+    if path.endswith(("conv_b", "dt_bias", "D")):   # (di,)
+        return P(fm(0))
+    if path.endswith("A_log"):                      # (di, N)
+        return P(fm(0), None)
+    # norms / scalars / anything small: replicated
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_pspecs(params_shapes, cfg: ModelConfig, mesh):
+    """pytree of PartitionSpec matching a params (shape) tree."""
+    ax = _axes(mesh)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        if p.startswith("stages/"):
+            base = _base_spec(p, shape[1:], ax, cfg)
+            return P(None, *base)
+        return _base_spec(p, shape, ax, cfg)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def moment_pspecs(params_shapes, cfg: ModelConfig, mesh):
+    """Like param specs, with the FSDP dim widened to (pod, data) when a pod
+    axis exists (ZeRO-1 across pods). Falls back to the param spec when the
+    dim doesn't divide the widened axis."""
+    ax = _axes(mesh)
+    base = param_pspecs(params_shapes, cfg, mesh)
+    if "pod" not in ax:
+        return base
+    wide = ax["pod"] * ax["data"]
+
+    def widen(spec, leaf):
+        parts = list(spec)
+        shape = tuple(leaf.shape)
+        for i, part in enumerate(parts):
+            if part == "data" and shape[i] % wide == 0:
+                parts[i] = ("pod", "data")
+        return P(*parts)
+
+    return jax.tree.map(widen, base, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_pspecs(state_shapes, cfg: ModelConfig, mesh):
+    """Specs for a TrainState(params, opt=(step, m, v))."""
+    from ..train.state import TrainState
+    from ..optim.adamw import AdamWState
+    p_specs = param_pspecs(state_shapes.params, cfg, mesh)
+    m_specs = moment_pspecs(state_shapes.opt.m, cfg, mesh)
+    v_specs = moment_pspecs(state_shapes.opt.v, cfg, mesh)
+    return TrainState(params=p_specs,
+                      opt=AdamWState(step=P(), m=m_specs, v=v_specs))
+
+
+# ---------------------------------------------------------------------------
+# batch & cache
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    rules = activation_rules(cfg, mesh, shape)
+    b = rules["batch"]
+    specs = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.prefix_len:
+        specs["prefix_embed"] = P(b, None, None)
+    return specs
+
+
+def cache_pspecs(cache_shapes, cfg: ModelConfig, mesh, shape: ShapeSpec):
+    """Specs for the stacked decode cache (leading dim = stages)."""
+    ax = _axes(mesh)
+    rules = activation_rules(cfg, mesh, shape)
+    b = rules["batch"]
+    model = ax["model"]
+    # sequence dim of the KV cache: model axis; batch=1 long-context also
+    # takes the data axis (cache is the dominant tensor there)
+    if b is None and "data" in ax:
+        seq_axes = ("data", "model")
+        seq_div = ax["data"] * model
+    else:
+        seq_axes = "model"
+        seq_div = model
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            # (L, B, maxlen, KV, hd)
+            ml = node.k.shape[2]
+            seq = seq_axes if ml % seq_div == 0 else None
+            spec = P(None, b, seq, None, None)
+            return KVCache(k=spec, v=spec)
+        if isinstance(node, SSMCache):
+            di = node.state.shape[2]
+            return SSMCache(
+                state=P(None, b, _fit(di, model, "model"), None),
+                conv=P(None, b, None, _fit(node.conv.shape[-1], model,
+                                           "model")))
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        raise TypeError(f"unexpected cache node {type(node)}")
+
+    return walk(cache_shapes)
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,15 @@
+"""Model zoo: config-driven LM covering dense / MoE / SSM / hybrid families."""
+
+from .attention import KVCache, attn_decode, attn_init, attn_train
+from .common import logical_axis_rules, shard
+from .model import LM
+from .moe import moe_apply, moe_capacity, moe_init
+from .ssm import SSMCache, ssm_decode, ssm_init, ssm_train
+
+__all__ = [
+    "LM", "KVCache", "SSMCache",
+    "attn_init", "attn_train", "attn_decode",
+    "moe_init", "moe_apply", "moe_capacity",
+    "ssm_init", "ssm_train", "ssm_decode",
+    "logical_axis_rules", "shard",
+]

@@ -1,0 +1,226 @@
+"""Attention: GQA/MQA/MHA with RoPE or sinusoidal positions, optional QKV
+bias, logit soft-capping (grok), sliding-window + global mix (gemma3).
+
+Two execution paths:
+* train/prefill — chunked online-softmax attention (``lax.scan`` over KV
+  blocks; the same schedule the Pallas ``flash_attention`` kernel implements,
+  so HLO memory stays O(S * block) instead of O(S^2)). The Pallas kernel is
+  swapped in through ``repro.kernels.ops`` on TPU.
+* decode — one query token against a (possibly huge) KV cache; a masked
+  matvec, memory-bound by design.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init, rope, shard
+
+__all__ = ["attn_init", "attn_train", "attn_decode", "KVCache",
+           "reference_attention"]
+
+_NEG = -2.0 ** 30  # large-negative mask value safe in bf16/f32
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, L, KV, hd)
+    v: jax.Array        # (B, L, KV, hd)
+
+    @classmethod
+    def zeros(cls, batch: int, max_len: int, n_kv: int, head_dim: int,
+              dtype=jnp.bfloat16):
+        shape = (batch, max_len, n_kv, head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d,
+                         scale=(cfg.n_heads * hd * 2 * cfg.n_layers) ** -0.5,
+                         dtype=dtype),
+    }
+
+
+def _softcap(logits, cap):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _project_qkv(params, x, cfg, positions, compute_dtype):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(params["wq"], x, compute_dtype).reshape(b, s, cfg.n_heads, hd)
+    k = dense(params["wk"], x, compute_dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], x, compute_dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def reference_attention(q, k, v, mask, softcap=None):
+    """Full-materialisation oracle (used by smoke tests & kernel refs).
+
+    q: (B,S,H,hd); k,v: (B,S,KV,hd); mask: (B,1,S,S) or (S,S) bool.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, hd)
+    logits = jnp.einsum("bskrh,btkh->bkrst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    logits = _softcap(logits.astype(jnp.float32), softcap)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:  # (B,1,S,S) -> (B,1,1,S,S)
+        mask = mask[:, :, None]
+    logits = jnp.where(mask, logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,btkh->bskrh", w.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, window=None,
+                      is_global=True, softcap=None, block=512):
+    """Online-softmax attention, scanning KV blocks (flash schedule in XLA).
+
+    Causal by position; optional sliding window unless ``is_global`` (a
+    python bool or traced scalar — gemma3 mixes both under one layer scan).
+    GQA KV heads are expanded per block (broadcast, O(block) extra memory),
+    keeping every tensor flat over H so head sharding stays clean.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    s_kv = k.shape[1]
+    block = min(block, s_kv)
+    n_blocks = -(-s_kv // block)
+    pad = n_blocks * block - s_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+    kb = k.reshape(b, n_blocks, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(b, n_blocks, block).transpose(1, 0, 2)
+    scale = hd ** -0.5
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, pc = blk                        # (B,blk,KV,hd), (B,blk)
+        if rep > 1:  # expand grouped KV to full heads for this block only
+            kc = jnp.repeat(kc, rep, axis=2)
+            vc = jnp.repeat(vc, rep, axis=2)
+        logits = jnp.einsum("bshd,bthd->bhst", q, kc).astype(jnp.float32)
+        logits = _softcap(logits * scale, softcap)
+        causal = q_positions[:, None, :, None] >= pc[:, None, None, :]
+        valid = pc[:, None, None, :] >= 0
+        mask = causal & valid
+        if window is not None:
+            in_win = (q_positions[:, None, :, None]
+                      - pc[:, None, None, :]) < window
+            mask = mask & (jnp.asarray(is_global) | in_win)
+        logits = jnp.where(mask, logits, _NEG)
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    acc0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)            # (B,S,H,hd)
+    return out.astype(q.dtype)
+
+
+def attn_train(params, x, cfg, *, positions, is_global=True, block=512):
+    """Self-attention over a full sequence (train / prefill)."""
+    compute_dtype = x.dtype
+    q, k, v = _project_qkv(params, x, cfg, positions, compute_dtype)
+    out = chunked_attention(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        window=cfg.sliding_window, is_global=is_global,
+        softcap=cfg.attn_logit_softcap, block=block)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    out = shard(out, "batch", None, "heads_flat")
+    return dense(params["wo"], out, compute_dtype)
+
+
+def attn_prefill(params, x, cfg, cache: KVCache, *, positions,
+                 is_global=True, block=512):
+    """Prompt processing: full self-attention AND KV-cache population.
+
+    positions: (B, S) with -1 on right padding (padded keys are masked, the
+    cache rows beyond each sequence's length are never read by decode).
+    Returns (y, new_cache).
+    """
+    compute_dtype = x.dtype
+    b, s, _ = x.shape
+    safe_pos = jnp.maximum(positions, 0)
+    q, k, v = _project_qkv(params, x, cfg, safe_pos, compute_dtype)
+    out = chunked_attention(
+        q, k, v, q_positions=safe_pos, kv_positions=positions,
+        window=cfg.sliding_window, is_global=is_global,
+        softcap=cfg.attn_logit_softcap, block=block)
+    out = out.reshape(b, s, -1)
+    y = dense(params["wo"], out, compute_dtype)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+    return y, KVCache(k_cache, v_cache)
+
+
+def attn_decode(params, x, cfg, cache: KVCache, lengths, *, is_global=True):
+    """One-token decode against the KV cache.
+
+    x: (B, 1, d); lengths: (B,) current length per sequence (the new token's
+    position). Returns (y, new_cache).
+    """
+    compute_dtype = x.dtype
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    positions = lengths[:, None]                       # (B,1)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions, compute_dtype)
+    bidx = jnp.arange(b)
+    k_cache = cache.k.at[bidx, lengths].set(k_new[:, 0].astype(cache.k.dtype))
+    v_cache = cache.v.at[bidx, lengths].set(v_new[:, 0].astype(cache.v.dtype))
+
+    kvh = cfg.n_kv_heads
+    rep = cfg.n_heads // kvh
+    qg = q.reshape(b, kvh, rep, hd)
+    logits = jnp.einsum("bkrh,btkh->bkrt", qg,
+                        k_cache.astype(compute_dtype)).astype(jnp.float32)
+    logits = _softcap(logits * hd ** -0.5, cfg.attn_logit_softcap)
+    t = jnp.arange(cache.k.shape[1])
+    mask = t[None, :] <= lengths[:, None]              # (B, L)
+    if cfg.sliding_window is not None:
+        in_win = (lengths[:, None] - t[None, :]) < cfg.sliding_window
+        mask = mask & (jnp.asarray(is_global) | in_win)
+    logits = jnp.where(mask[:, None, None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrt,btkh->bkrh", w.astype(compute_dtype),
+                     v_cache.astype(compute_dtype))
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    y = dense(params["wo"], out, compute_dtype)
+    return y, KVCache(k_cache, v_cache)

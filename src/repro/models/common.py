@@ -1,0 +1,157 @@
+"""Shared model building blocks: norms, embeddings, RoPE, init, sharding hooks.
+
+Pure-functional JAX: every layer is an ``init(key, ...) -> params`` plus an
+``apply(params, x, ...)`` pair over plain dict pytrees. Activation sharding
+uses *logical axis names* resolved through a context set by the launcher
+(`logical_axis_rules`); with no rules set, ``shard`` is a no-op so the same
+model code runs on one CPU device and on a 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "logical_axis_rules", "shard", "param_spec_rules",
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "layernorm_np",
+    "embed_init", "rope", "sinusoidal_positions", "dtype_of",
+]
+
+_RULES: ContextVar[dict | None] = ContextVar("logical_axis_rules",
+                                             default=None)
+
+
+@contextmanager
+def logical_axis_rules(rules: dict[str, str | tuple | None]):
+    """Bind logical-axis -> mesh-axis rules (e.g. {"batch": ("pod", "data"),
+    "ff": "model"}) for the duration of a trace."""
+    token = _RULES.set(dict(rules))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> dict | None:
+    return _RULES.get()
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op without
+    rules). ``None`` entries are unsharded dims."""
+    rules = _RULES.get()
+    if not rules:
+        return x
+    spec = P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_spec_rules(logical_axes: Sequence[str | None],
+                     rules: dict) -> P:
+    """Resolve a parameter's logical axes to a PartitionSpec."""
+    return P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16,
+            "float8_e4m3fn": jnp.float8_e4m3fn}[name]
+
+
+# ---------------------------------------------------------------------------
+# dense / norm / embed
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (scale defaults to 1/sqrt(d_in))."""
+    if scale is None:
+        scale = d_in ** -0.5
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                    dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = params["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_np(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Parametric LayerNorm (musicgen, nemotron)."""
+    y = layernorm_np(x, eps).astype(jnp.float32)
+    y = y * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., None, :]   # (...,S,1,half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Transformer sinusoidal embeddings (MusicGen-style)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,45 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain, with silu / gelu /
+squared-ReLU (nemotron) activations."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init, shard
+
+__all__ = ["mlp_init", "mlp_apply", "activation_fn"]
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # nemotron-4: squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp_init(key, d: int, ff: int, *, gated: bool, n_layers: int,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d, ff, dtype=dtype),
+        "wo": dense_init(ks[1], ff, d, scale=(ff * 2 * n_layers) ** -0.5,
+                         dtype=dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], d, ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(params, x, *, activation: str):
+    act = activation_fn(activation)
+    h = dense(params["wi"], x, x.dtype)
+    if "wg" in params:
+        h = act(dense(params["wg"], x, x.dtype)) * h
+    else:
+        h = act(h)
+    h = shard(h, "batch", None, "ff")
+    return dense(params["wo"], h, x.dtype)

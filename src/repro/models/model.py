@@ -1,0 +1,461 @@
+"""LM assembly: config-driven decoder stack covering all assigned families.
+
+Layer stacking uses ``lax.scan`` over *stages* with stacked parameters, so
+HLO size and compile time are O(1) in depth (64-layer models lower as fast
+as 2-layer ones — essential for the 40-cell dry-run):
+
+* dense / moe / ssm / vlm / audio families: stage = one layer, uniform
+  params; per-layer variation (gemma3 local/global) rides a scan-carried
+  boolean array;
+* hybrid (jamba): stage = one period of ``attn_every`` sub-layers (7 mamba +
+  1 attention, MoE on odd sub-layers), scanned over periods.
+
+Decode carries a per-stage cache pytree through the same scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (
+    KVCache,
+    attn_decode,
+    attn_init,
+    attn_prefill,
+    attn_train,
+)
+from .common import (
+    dense,
+    dense_init,
+    dtype_of,
+    embed_init,
+    layernorm,
+    layernorm_init,
+    layernorm_np,
+    rmsnorm,
+    rmsnorm_init,
+    shard,
+    sinusoidal_positions,
+)
+from .mlp import mlp_apply, mlp_init
+from .moe import moe_apply, moe_init
+from .ssm import SSMCache, ssm_decode, ssm_init, ssm_prefill, ssm_train
+
+__all__ = ["LM"]
+
+Params = Any
+
+
+def _zero_aux():
+    return {"moe_aux_loss": jnp.float32(0.0), "overflow": jnp.int32(0),
+            "rebalanced": jnp.int32(0), "dropped": jnp.int32(0)}
+
+
+class LM:
+    """Functional LM; all state lives in explicit pytrees.
+
+    ``unroll=True`` replaces every ``lax.scan`` (stage loop, attention KV
+    blocks, SSM chunks) with straight-line code — used by the dry-run's
+    *analysis* lowering, where XLA's cost model must see every FLOP (while-
+    loop bodies are otherwise counted once; see launch/dryrun.py)."""
+
+    def __init__(self, cfg: ModelConfig, *, unroll: bool = False,
+                 attn_block: int = 512, ssm_chunk: int = 256):
+        self.cfg = cfg
+        if cfg.family == "hybrid":
+            if cfg.n_layers % cfg.attn_every:
+                raise ValueError("hybrid needs n_layers % attn_every == 0")
+            self.period = cfg.attn_every
+            self.n_stages = cfg.n_layers // cfg.attn_every
+        else:
+            self.period = 1
+            self.n_stages = cfg.n_layers
+        self.unroll = unroll
+        self.attn_block = 1 << 30 if unroll else attn_block
+        self.ssm_chunk = 1 << 30 if unroll else ssm_chunk
+        self.compute_dtype = dtype_of(cfg.dtype)
+        self.param_dtype = dtype_of(cfg.param_dtype)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_embed, k_stage, k_head, k_prefix = jax.random.split(key, 4)
+        p: dict = {"embed": embed_init(k_embed, cfg.vocab_padded, cfg.d_model,
+                                       dtype=self.param_dtype)}
+        if cfg.prefix_len:
+            p["prefix_proj"] = dense_init(k_prefix, cfg.prefix_dim,
+                                          cfg.d_model, dtype=self.param_dtype)
+        stage_keys = jax.random.split(k_stage, self.n_stages)
+        p["stages"] = jax.vmap(self._stage_init)(stage_keys)
+        p["final_norm"] = self._norm_init()
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(k_head, cfg.d_model, cfg.vocab_padded,
+                                      dtype=self.param_dtype)
+        return p
+
+    def _norm_init(self):
+        if self.cfg.norm_type == "rmsnorm":
+            return rmsnorm_init(self.cfg.d_model, self.param_dtype)
+        if self.cfg.norm_type == "layernorm":
+            return layernorm_init(self.cfg.d_model, self.param_dtype)
+        return {}  # olmo: non-parametric
+
+    def _norm(self, params, x):
+        if self.cfg.norm_type == "rmsnorm":
+            return rmsnorm(params, x)
+        if self.cfg.norm_type == "layernorm":
+            return layernorm(params, x)
+        return layernorm_np(x)
+
+    def _ffn_init(self, key, layer_idx: int):
+        cfg = self.cfg
+        if cfg.is_moe and (layer_idx % cfg.moe_every) == (cfg.moe_every - 1):
+            return {"moe": moe_init(key, cfg, self.param_dtype)}
+        return {"mlp": mlp_init(key, cfg.d_model, cfg.d_ff,
+                                gated=cfg.mlp_gated, n_layers=cfg.n_layers,
+                                dtype=self.param_dtype)}
+
+    def _stage_init(self, key):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            k1, k2 = jax.random.split(key)
+            return {"norm": self._norm_init(),
+                    "mamba": ssm_init(k2, cfg, self.param_dtype)}
+        if cfg.family == "hybrid":
+            sub = {}
+            keys = jax.random.split(key, self.period)
+            for j in range(self.period):
+                kj1, kj2 = jax.random.split(keys[j])
+                mixer = (attn_init(kj1, cfg, self.param_dtype)
+                         if j == cfg.attn_offset
+                         else ssm_init(kj1, cfg, self.param_dtype))
+                sub[f"sub_{j}"] = {
+                    "norm1": self._norm_init(),
+                    "mixer": mixer,
+                    "norm2": self._norm_init(),
+                    "ffn": self._ffn_init(kj2, j),
+                }
+            return sub
+        # dense / moe / vlm / audio: attention + (mlp|moe)
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": self._norm_init(),
+            "attn": attn_init(k1, cfg, self.param_dtype),
+            "norm2": self._norm_init(),
+            "ffn": self._ffn_init(k2, 0),
+        }
+
+    # ------------------------------------------------------------------
+    # per-stage meta (scan xs)
+    # ------------------------------------------------------------------
+    def stage_meta(self) -> dict:
+        cfg = self.cfg
+        idx = jnp.arange(self.n_stages)
+        if cfg.global_every:
+            is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+        elif cfg.sliding_window:
+            is_global = jnp.zeros((self.n_stages,), bool)
+        else:
+            is_global = jnp.ones((self.n_stages,), bool)
+        return {"is_global": is_global}
+
+    # ------------------------------------------------------------------
+    # train / prefill forward
+    # ------------------------------------------------------------------
+    def _ffn_apply(self, params, x):
+        if "moe" in params:
+            return moe_apply(params["moe"], x, self.cfg,
+                             mode=self.cfg.moe_mode)
+        return mlp_apply(params["mlp"], x,
+                         activation=self.cfg.activation), _zero_aux()
+
+    def _stage_train(self, sp, x, meta, positions):
+        cfg = self.cfg
+        name = jax.ad_checkpoint.checkpoint_name
+        aux = _zero_aux()
+        if cfg.family == "ssm":
+            h = ssm_train(sp["mamba"], self._norm(sp["norm"], x), cfg,
+                          chunk=self.ssm_chunk)
+            return x + name(h, "mixer_out"), aux
+        if cfg.family == "hybrid":
+            for j in range(self.period):
+                s = sp[f"sub_{j}"]
+                h = self._norm(s["norm1"], x)
+                if j == cfg.attn_offset:
+                    h = attn_train(s["mixer"], h, cfg, positions=positions,
+                                   is_global=meta["is_global"],
+                                   block=self.attn_block)
+                else:
+                    h = ssm_train(s["mixer"], h, cfg, chunk=self.ssm_chunk)
+                x = x + name(h, "mixer_out")
+                h, a = self._ffn_apply(s["ffn"],
+                                       self._norm(s["norm2"], x))
+                x = x + name(h, "ffn_out")
+                aux = jax.tree.map(lambda u, v: u + v, aux, a)
+            return x, aux
+        h = attn_train(sp["attn"], self._norm(sp["norm1"], x),
+                       cfg, positions=positions, is_global=meta["is_global"],
+                       block=self.attn_block)
+        x = x + name(h, "mixer_out")
+        h, a = self._ffn_apply(sp["ffn"], self._norm(sp["norm2"], x))
+        x = x + name(h, "ffn_out")
+        aux = jax.tree.map(lambda u, v: u + v, aux, a)
+        return x, aux
+
+    def embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        x = x.astype(self.compute_dtype)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, self.compute_dtype)
+        if cfg.pos_embed == "sinusoidal":
+            s = tokens.shape[1]
+            pos = sinusoidal_positions(jnp.arange(s), cfg.d_model)
+            x = x + pos[None].astype(self.compute_dtype)
+        return x
+
+    def apply(self, params, tokens, *, prefix_embed=None, remat=False):
+        """tokens: (B, S) -> (logits (B, S', V), aux). With a modality prefix
+        the sequence is [prefix; tokens] and logits cover token positions."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        n_prefix = 0
+        if prefix_embed is not None:
+            pe = dense(params["prefix_proj"], prefix_embed.astype(
+                self.compute_dtype), self.compute_dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            n_prefix = pe.shape[1]
+        x = shard(x, "batch", None, None)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        meta = self.stage_meta()
+
+        policies = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            # save mixer/FFN outputs: the backward pass skips the full
+            # forward recompute at ~1 stage-output of extra HBM per layer
+            "outputs": jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "ffn_out"),
+        }
+
+        def body(carry, xs):
+            sp, m = xs
+            fn = self._stage_train
+            if remat:
+                fn = jax.checkpoint(fn, policy=policies[cfg.remat_policy])
+            x_new, aux = fn(sp, carry[0], m, positions)
+            acc = jax.tree.map(lambda u, v: u + v, carry[1], aux)
+            return (x_new, acc), None
+
+        if self.unroll:
+            carry = (x, _zero_aux())
+            for i in range(self.n_stages):
+                carry, _ = body(carry, jax.tree.map(lambda v: v[i],
+                                                    (params["stages"], meta)))
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(body, (x, _zero_aux()),
+                                       (params["stages"], meta))
+        x = self._norm(params["final_norm"], x)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        logits = self._logits(params, x)
+        return logits, aux
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = params["embed"]["w"].astype(self.compute_dtype)
+            logits = x @ w.T
+        else:
+            logits = dense(params["unembed"], x, self.compute_dtype)
+        return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+    def loss(self, params, batch, *, remat=False):
+        """batch: {"tokens": (B,S), "labels": (B,S) with -1 = masked,
+        optional "prefix_embed"}. Returns (scalar loss, metrics)."""
+        logits, aux = self.apply(params, batch["tokens"],
+                                 prefix_embed=batch.get("prefix_embed"),
+                                 remat=remat)
+        labels = batch["labels"]
+        mask = labels >= 0
+        safe = jnp.where(mask, labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = (logz - ll) * mask
+        n_tok = jnp.maximum(mask.sum(), 1)
+        ce = nll.sum() / n_tok
+        total = ce + 1e-2 * aux["moe_aux_loss"] / max(self.cfg.n_layers, 1)
+        metrics = {"ce": ce, "tokens": n_tok, **aux}
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _stage_cache_zeros(self, batch, max_len, dtype):
+        cfg = self.cfg
+        kv_dtype = dtype_of(cfg.kv_cache_dtype) if dtype is None else dtype
+        ssm_dtype = self.compute_dtype if dtype is None else dtype
+        if cfg.family == "ssm":
+            return SSMCache.zeros(batch, cfg.d_inner, cfg.ssm_state,
+                                  cfg.ssm_conv, ssm_dtype)
+        if cfg.family == "hybrid":
+            c = {}
+            for j in range(self.period):
+                if j == cfg.attn_offset:
+                    c[f"sub_{j}"] = KVCache.zeros(
+                        batch, max_len, cfg.n_kv_heads, cfg.head_dim_,
+                        kv_dtype)
+                else:
+                    c[f"sub_{j}"] = SSMCache.zeros(
+                        batch, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv,
+                        ssm_dtype)
+            return c
+        return KVCache.zeros(batch, max_len, cfg.n_kv_heads, cfg.head_dim_,
+                             kv_dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        """dtype=None uses the config defaults (kv_cache_dtype for KV,
+        compute dtype for SSM state)."""
+        one = self._stage_cache_zeros(batch, max_len, dtype)
+        return jax.tree.map(
+            lambda leaf: jnp.zeros((self.n_stages,) + leaf.shape, leaf.dtype),
+            one)
+
+    def _stage_decode(self, sp, cache, x, meta, lengths):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            h, new = ssm_decode(sp["mamba"], self._norm(sp["norm"], x), cfg,
+                                cache)
+            return x + h, new
+        if cfg.family == "hybrid":
+            new_cache = {}
+            for j in range(self.period):
+                s = sp[f"sub_{j}"]
+                h = self._norm(s["norm1"], x)
+                if j == cfg.attn_offset:
+                    h, new = attn_decode(s["mixer"], h, cfg,
+                                         cache[f"sub_{j}"], lengths,
+                                         is_global=meta["is_global"])
+                else:
+                    h, new = ssm_decode(s["mixer"], h, cfg,
+                                        cache[f"sub_{j}"])
+                new_cache[f"sub_{j}"] = new
+                x = x + h
+                hf, _ = self._ffn_apply(s["ffn"], self._norm(s["norm2"], x))
+                x = x + hf
+            return x, new_cache
+        h, new = attn_decode(sp["attn"], self._norm(sp["norm1"], x), cfg,
+                             cache, lengths, is_global=meta["is_global"])
+        x = x + h
+        hf, _ = self._ffn_apply(sp["ffn"], self._norm(sp["norm2"], x))
+        x = x + hf
+        return x, new
+
+    def _scan_stages(self, body, x, params, cache, meta):
+        """Scan (or unroll, in analysis mode) stages carrying x and the
+        per-stage cache; returns (x, stacked new cache)."""
+        if self.unroll:
+            outs = []
+            for i in range(self.n_stages):
+                xs = jax.tree.map(lambda v: v[i],
+                                  (params["stages"], cache, meta))
+                x, new_c = body(x, xs)
+                outs.append(new_c)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+            return x, stacked
+        return jax.lax.scan(body, x, (params["stages"], cache, meta))
+
+    def _stage_prefill(self, sp, cache, x, meta, positions, mask):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            h, new = ssm_prefill(sp["mamba"], self._norm(sp["norm"], x), cfg,
+                                 cache, mask=mask, chunk=self.ssm_chunk)
+            return x + h, new
+        if cfg.family == "hybrid":
+            new_cache = {}
+            for j in range(self.period):
+                s = sp[f"sub_{j}"]
+                h = self._norm(s["norm1"], x)
+                if j == cfg.attn_offset:
+                    h, new = attn_prefill(s["mixer"], h, cfg,
+                                          cache[f"sub_{j}"],
+                                          positions=positions,
+                                          is_global=meta["is_global"],
+                                          block=self.attn_block)
+                else:
+                    h, new = ssm_prefill(s["mixer"], h, cfg,
+                                         cache[f"sub_{j}"], mask=mask,
+                                         chunk=self.ssm_chunk)
+                new_cache[f"sub_{j}"] = new
+                x = x + h
+                hf, _ = self._ffn_apply(s["ffn"], self._norm(s["norm2"], x))
+                x = x + hf
+            return x, new_cache
+        h, new = attn_prefill(sp["attn"], self._norm(sp["norm1"], x), cfg,
+                              cache, positions=positions,
+                              is_global=meta["is_global"],
+                              block=self.attn_block)
+        x = x + h
+        hf, _ = self._ffn_apply(sp["ffn"], self._norm(sp["norm2"], x))
+        x = x + hf
+        return x, new
+
+    def prefill(self, params, cache, tokens, lengths):
+        """Process right-padded prompts and populate the cache.
+
+        tokens: (B, S); lengths: (B,) real lengths (<= S <= cache max_len).
+        Returns (last-token logits (B, V), new_cache)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        mask = pos < lengths[:, None]
+        positions = jnp.where(mask, pos, -1)
+        x = self.embed_tokens(params, tokens)
+        x = shard(x, "batch", None, None)
+        meta = self.stage_meta()
+
+        def body(carry, xs):
+            sp, cache_s, m = xs
+            x_new, cache_new = self._stage_prefill(sp, cache_s, carry, m,
+                                                   positions, mask)
+            return x_new, cache_new
+
+        x, new_cache = self._scan_stages(body, x, params, cache, meta)
+        x = self._norm(params["final_norm"], x)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)  # (B,1,d)
+        logits = self._logits(params, last)[:, 0]
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, lengths):
+        """tokens: (B, 1) current token; lengths: (B,) its position.
+        Returns (logits (B, 1, V), new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        x = x.astype(self.compute_dtype)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, self.compute_dtype)
+        if cfg.pos_embed == "sinusoidal":
+            pos = sinusoidal_positions(lengths[:, None], cfg.d_model)
+            x = x + pos.astype(self.compute_dtype)
+        x = shard(x, "batch", None, None)
+        meta = self.stage_meta()
+
+        def body(carry, xs):
+            sp, cache_s, m = xs
+            x_new, cache_new = self._stage_decode(sp, cache_s, carry, m,
+                                                  lengths)
+            return x_new, cache_new
+
+        x, new_cache = self._scan_stages(body, x, params, cache, meta)
+        x = self._norm(params["final_norm"], x)
+        logits = self._logits(params, x)
+        return logits, new_cache

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts layer with PSTS positional-scan dispatch.
+
+Routing runs per token *group* (a sequence), the data-parallel unit: groups
+shard over the batch axes, expert FFN hidden shards over the model axis.
+
+Data movement modes (see EXPERIMENTS §Perf):
+  * ``scatter`` (default): tokens scatter into (E, C) slot buffers and gather
+    back — no matmul FLOPs spent on dispatch;
+  * ``einsum``: classic GShard dense (T, E, C) one-hot einsums — kept as the
+    baseline for the perf comparison.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sched.moe_dispatch import dispatch, router_aux_loss
+from .common import dense_init, shard
+from .mlp import activation_fn
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(group_tokens: int, k: int, n_experts: int,
+                 capacity_factor: float) -> int:
+    """Per-expert slot count; multiple of 8 for TPU lane alignment."""
+    c = math.ceil(group_tokens * k * capacity_factor / n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    scale_out = (ff * 2 * cfg.n_layers) ** -0.5
+    p = {
+        "router": dense_init(kr, d, e, dtype=jnp.float32),  # router in f32
+        "wi": (jax.random.truncated_normal(ki, -2, 2, (e, d, ff))
+               * scale_in).astype(dtype),
+        "wo": (jax.random.truncated_normal(ko, -2, 2, (e, ff, d))
+               * scale_out).astype(dtype),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = (jax.random.truncated_normal(kg, -2, 2, (e, d, ff))
+                   * scale_in).astype(dtype)
+    return p
+
+
+def _expert_ffn(params, xin, activation, compute_dtype):
+    """xin: (G, E, C, d) -> (G, E, C, d); per-expert matmuls (MXU shaped).
+
+    Runs OUTSIDE the per-group vmap so expert-parallel sharding constraints
+    (E over the expert/model axis) apply to the full stacked tensors — this
+    is the EP data path: dispatch/combine resharding happens around these
+    einsums, the FFN itself is local per expert shard (EXPERIMENTS §Perf).
+    """
+    xin = shard(xin, "moe_group", "experts", None, None)
+    wi = params["wi"].astype(compute_dtype)
+    wo = params["wo"].astype(compute_dtype)
+    h = jnp.einsum("gecd,edf->gecf", xin, wi)
+    if "wg" in params:
+        g = jnp.einsum("gecd,edf->gecf", xin,
+                       params["wg"].astype(compute_dtype))
+        h = activation_fn(activation)(g) * h
+    else:
+        h = activation_fn(activation)(h)
+    h = shard(h, "moe_group", "experts", None, "moe_ff")
+    out = jnp.einsum("gecf,efd->gecd", h, wo)
+    return shard(out, "moe_group", "experts", None, None)
+
+
+def moe_apply(params, x, cfg, *, rebalance=None, mode: str = "scatter"):
+    """x: (B, S, d) -> (y, aux). Routing group = one sequence."""
+    b, s, d = x.shape
+    compute_dtype = x.dtype
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = moe_capacity(s, k, e, cfg.capacity_factor)
+    if rebalance is None:
+        rebalance = cfg.psts_rebalance
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"]["w"])
+    aux_loss = router_aux_loss(logits, k)
+
+    # per-group dispatch decisions (indices only; cheap)
+    res = jax.vmap(lambda lg: dispatch(
+        lg, k=k, capacity=cap, rebalance=rebalance,
+        position_method=cfg.dispatch_positions))(logits)
+
+    if mode == "scatter":
+        tok, valid = _slot_maps(res)                      # (G,E,C) each
+        xin = jax.vmap(lambda xg, t: xg[t])(x, tok)       # (G,E,C,d)
+        xin = xin * valid[..., None].astype(compute_dtype)
+        out = _expert_ffn(params, xin, cfg.activation, compute_dtype)
+        y_slots = jax.vmap(lambda og, ei, si: og[ei, si])(
+            out, res.expert_idx, res.slot_idx)            # (G,S,k,d)
+        w = (res.weight * res.keep).astype(compute_dtype)
+        y = (y_slots * w[..., None]).sum(axis=2)
+    elif mode == "einsum":
+        d_tensor, combine = jax.vmap(lambda r: r.dense(
+            dtype=compute_dtype))(res)
+        xin = jnp.einsum("gtec,gtd->gecd", d_tensor, x)
+        out = _expert_ffn(params, xin, cfg.activation, compute_dtype)
+        y = jnp.einsum("gtec,gecd->gtd", combine, out)
+    else:
+        raise ValueError(f"unknown moe mode {mode!r}")
+
+    y = shard(y, "batch", None, None)
+    aux = {"moe_aux_loss": aux_loss,
+           "overflow": res.aux["overflow"].sum(),
+           "rebalanced": res.aux["rebalanced"].sum(),
+           "dropped": res.aux["dropped"].sum()}
+    return y, aux
+
+
+def _slot_maps(res):
+    """vmapped slot_to_token over the stacked DispatchResult."""
+    def one(expert_idx, slot_idx, keep):
+        from ..sched.moe_dispatch import DispatchResult
+        r = DispatchResult(expert_idx, slot_idx, keep,
+                           weight=jnp.zeros_like(expert_idx,
+                                                 dtype=jnp.float32),
+                           capacity=res.capacity, n_experts=res.n_experts,
+                           aux={})
+        return r.slot_to_token()
+    return jax.vmap(one)(res.expert_idx, res.slot_idx, res.keep)

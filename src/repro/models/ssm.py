@@ -1,0 +1,209 @@
+"""Mamba-1 selective-state-space block (falcon-mamba, jamba).
+
+Train path: depthwise causal conv (global, cheap) followed by the selective
+scan evaluated in sequence *chunks* — ``lax.scan`` over chunks with an
+in-chunk ``associative_scan`` — so peak memory is O(B * chunk * d_inner * N)
+instead of O(B * S * d_inner * N). The Pallas ``mamba_scan`` kernel
+implements the same blocked schedule for TPU.
+
+Decode path: O(1) per step — a single state update against the carried
+(state, conv window) cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard
+
+__all__ = ["ssm_init", "ssm_train", "ssm_decode", "SSMCache",
+           "selective_scan_chunked", "selective_scan_ref"]
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, d_inner, N)
+    conv: jax.Array        # (B, K-1, d_inner) — last K-1 pre-conv inputs
+
+    @classmethod
+    def zeros(cls, batch: int, d_inner: int, n_state: int, conv_k: int,
+              dtype=jnp.float32):
+        return cls(
+            jnp.zeros((batch, d_inner, n_state), dtype),
+            jnp.zeros((batch, conv_k - 1, d_inner), dtype),
+        )
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    d, di, n, dr, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.dt_rank, cfg.ssm_conv)
+    keys = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias so softplus(dt) ~ [1e-3, 1e-1]
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :],
+                      (di, 1))
+    dt = jnp.exp(jax.random.uniform(keys[4], (di,))
+                 * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(keys[1], (k, di)) * k ** -0.5
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(keys[2], di, dr + 2 * n, dtype=dtype),
+        "dt_proj": dense_init(keys[3], dr, di, scale=dr ** -0.5, dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a_init),                      # (di, N) f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[5], di, d,
+                               scale=(di * 2 * cfg.n_layers) ** -0.5,
+                               dtype=dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, conv_state=None):
+    """x: (B, S, di); w: (K, di). Returns conv output and the trailing K-1
+    inputs (the next conv_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)             # (B, S+K-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return out + b[None, None, :], new_state
+
+
+def selective_scan_ref(da, dbx):
+    """Oracle: h_t = da_t * h_{t-1} + dbx_t via associative_scan over S.
+
+    da, dbx: (B, S, di, N). Returns h: (B, S, di, N).
+    """
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    return h
+
+
+def selective_scan_chunked(da, dbx, h0=None, chunk: int = 256):
+    """Blocked selective scan: associative within chunks, sequential carry
+    across — O(B * chunk * di * N) live memory."""
+    b, s, di, n = da.shape
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)   # identity transition
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    da_c = da.reshape(b, n_chunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(b, n_chunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), da.dtype)
+
+    def step(h_in, blk):
+        da_b, dbx_b = blk                              # (B, chunk, di, N)
+        h_local = selective_scan_ref(da_b, dbx_b)
+        # fold the inter-chunk carry: h_t += (prod_{<=t} da) * h_in
+        da_cum = jnp.cumprod(da_b, axis=1)
+        h_full = h_local + da_cum * h_in[:, None]
+        return h_full[:, -1], h_full
+
+    h_last, h_chunks = jax.lax.scan(step, h0, (da_c, dbx_c))
+    h = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, di, n)
+    return h[:, :s], h_last
+
+
+def _ssm_core(params, xc, dt_chunked=False):
+    """Shared projections: xc (B,S,di) post-conv+silu -> (da, dbx, C)."""
+    dr = params["dt_proj"]["w"].shape[0]
+    n = params["A_log"].shape[1]
+    dbc = xc @ params["x_proj"]["w"].astype(xc.dtype)  # (B,S,dr+2N)
+    dt_raw, b_mat, c_mat = jnp.split(dbc, [dr, dr + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) @ params["dt_proj"]["w"].astype(jnp.float32)
+        + params["dt_bias"])                            # (B,S,di) f32
+    a = -jnp.exp(params["A_log"])                       # (di,N)
+    da = jnp.exp(dt[..., None] * a[None, None])         # (B,S,di,N)
+    dbx = (dt[..., None] * b_mat.astype(jnp.float32)[:, :, None, :]
+           * xc.astype(jnp.float32)[..., None])         # (B,S,di,N)
+    return da, dbx, c_mat
+
+
+def ssm_train(params, x, cfg, chunk: int = 256):
+    """x: (B, S, d) -> (B, S, d)."""
+    compute_dtype = x.dtype
+    xz = x @ params["in_proj"]["w"].astype(compute_dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)                   # (B,S,di) each
+    xr = shard(xr, "batch", None, "ff")
+    xc, _ = _causal_depthwise_conv(
+        xr, params["conv_w"].astype(compute_dtype),
+        params["conv_b"].astype(compute_dtype))
+    xc = jax.nn.silu(xc)
+    da, dbx, c_mat = _ssm_core(params, xc)
+    h, _ = selective_scan_chunked(da, dbx, chunk=chunk)  # (B,S,di,N) f32
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_mat.astype(jnp.float32))
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = (y.astype(compute_dtype)) * jax.nn.silu(z)
+    y = shard(y, "batch", None, "ff")
+    return y @ params["out_proj"]["w"].astype(compute_dtype)
+
+
+def ssm_prefill(params, x, cfg, cache: SSMCache, *, mask, chunk: int = 256):
+    """Prompt processing with state capture. mask: (B, S) bool, False on
+    padding — masked steps are identity transitions (da=1, dbx=0), so the
+    final state is exactly the state after each sequence's last real token
+    (right-padded batches). Returns (y, new_cache)."""
+    compute_dtype = x.dtype
+    b, s, _ = x.shape
+    k = cfg.ssm_conv
+    xz = x @ params["in_proj"]["w"].astype(compute_dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xr = xr * mask[..., None].astype(compute_dtype)
+    xc, _ = _causal_depthwise_conv(
+        xr, params["conv_w"].astype(compute_dtype),
+        params["conv_b"].astype(compute_dtype))
+    xc = jax.nn.silu(xc)
+    da, dbx, c_mat = _ssm_core(params, xc)
+    m = mask[..., None, None].astype(jnp.float32)
+    da = da * m + (1.0 - m)          # identity on padding
+    dbx = dbx * m
+    h, h_last = selective_scan_chunked(da, dbx, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_mat.astype(jnp.float32))
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = (y.astype(compute_dtype)) * jax.nn.silu(z)
+    y = y @ params["out_proj"]["w"].astype(compute_dtype)
+    # conv tail: the last K-1 *pre-conv* inputs before each sequence end
+    lengths = mask.sum(axis=1).astype(jnp.int32)       # (B,)
+    idx = lengths[:, None] - (k - 1) + jnp.arange(k - 1)[None, :]
+    gathered = jnp.take_along_axis(
+        xr, jnp.maximum(idx, 0)[..., None], axis=1)     # (B, K-1, di)
+    conv_state = jnp.where((idx >= 0)[..., None], gathered, 0.0)
+    return y, SSMCache(h_last.astype(cache.state.dtype),
+                       conv_state.astype(cache.conv.dtype))
+
+
+def ssm_decode(params, x, cfg, cache: SSMCache):
+    """One-token decode. x: (B, 1, d) -> (y, new_cache)."""
+    compute_dtype = x.dtype
+    xz = x @ params["in_proj"]["w"].astype(compute_dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)                   # (B,1,di)
+    xc, conv_state = _causal_depthwise_conv(
+        xr, params["conv_w"].astype(compute_dtype),
+        params["conv_b"].astype(compute_dtype),
+        conv_state=cache.conv)
+    xc = jax.nn.silu(xc)
+    da, dbx, c_mat = _ssm_core(params, xc)              # (B,1,di,N)
+    h = da[:, 0] * cache.state.astype(jnp.float32) + dbx[:, 0]  # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0].astype(jnp.float32))
+    y = y + params["D"][None] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(compute_dtype)) * jax.nn.silu(z)
+    y = y @ params["out_proj"]["w"].astype(compute_dtype)
+    return y, SSMCache(h.astype(cache.state.dtype),
+                       conv_state.astype(cache.conv.dtype))

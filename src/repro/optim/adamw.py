@@ -1,0 +1,84 @@
+"""AdamW with decoupled weight decay — pure-JAX pytree optimizer.
+
+Moments are stored in ``moments_dtype`` (bf16 knob for grok-314B at 256
+chips, DESIGN.md section 7) with f32 math at update time. State is a pytree
+mirroring params, so it shards exactly like params (ZeRO-3 equivalent under
+FSDP rules)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "clip_by_global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moments_dtype: Any = jnp.float32
+    # decay applies to matrices only (norms/biases/scalars exempt)
+    min_decay_ndim: int = 2
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moments_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params, lr):
+        """Returns (new_params, new_state). lr may be a traced scalar."""
+        step = state.step + 1
+        b1t = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            mhat = m32 / b1t
+            vhat = v32 / b2t
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            p32 = p.astype(jnp.float32)
+            if p.ndim >= self.min_decay_ndim:
+                delta = delta + self.weight_decay * p32
+            p_new = p32 - lr * delta
+            return (p_new.astype(p.dtype), m32.astype(self.moments_dtype),
+                    v32.astype(self.moments_dtype))
+
+        flat = jax.tree.map(upd, grads, state.m, state.v, params)
+        # unzip the 3-tuples
+        p_new = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        m_new = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        v_new = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return p_new, AdamWState(step=step, m=m_new, v=v_new)

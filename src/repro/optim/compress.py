@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback — the distributed-
+optimization trick for the DCN (pod-axis) gradient reduce.
+
+Per-tensor symmetric int8 quantisation; the residual (quantisation error)
+is carried in an error-feedback buffer and added back before the next
+compression, so the scheme is unbiased over time (EF-SGD). Applied to the
+pod-axis gradient contribution before the cross-pod reduce (1/4 the DCN
+bytes of bf16)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionState", "init_state", "compress", "decompress",
+           "compress_with_feedback"]
+
+
+class CompressionState(NamedTuple):
+    error: Any  # pytree of f32 residuals, like grads
+
+
+def init_state(grads) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def compress(x: jax.Array):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(x32).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, state: CompressionState):
+    """Returns ((q_tree, scale_tree), new_state). Decompressing and adding
+    the carried error reproduces the input exactly; over steps the feedback
+    makes the compression unbiased."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = jax.tree.leaves(state.error)
+    qs, scales, errs = [], [], []
+    for g, e in zip(g_leaves, e_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress(corrected)
+        qs.append(q)
+        scales.append(s)
+        errs.append(corrected - decompress(q, s))
+    return ((jax.tree.unflatten(treedef, qs),
+             jax.tree.unflatten(treedef, scales)),
+            CompressionState(error=jax.tree.unflatten(treedef, errs)))

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (warmup + cosine / constant / rsqrt)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_rsqrt", "constant"]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_ratio: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(
+            jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return schedule
+
+
+def warmup_rsqrt(peak_lr: float, warmup_steps: int):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(step, 1.0))
+        return jnp.where(step < warmup_steps, warm, decay)
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

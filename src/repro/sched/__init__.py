@@ -1,0 +1,12 @@
+"""PSTS scheduling integrations (DESIGN.md section 3):
+
+  moe_dispatch  — token -> expert positional-scan dispatch (in-XLA)
+  data_balance  — sequence -> data-shard balancing (host, per step)
+  request_sched — request -> replica continuous-batching scheduler
+  straggler     — adaptive processing-power estimation (EWMA step times)
+"""
+
+from .moe_dispatch import DispatchResult, dispatch, dispatch_grouped, router_aux_loss
+
+__all__ = ["DispatchResult", "dispatch", "dispatch_grouped",
+           "router_aux_loss"]

@@ -1,0 +1,242 @@
+"""PSTS token -> expert dispatch (DESIGN.md section 3.1) — the paper's
+positional-scan balancing applied per MoE layer, inside XLA.
+
+Mapping onto the paper:
+  tokens  = indivisible tasks (beta = 1 work unit),
+  experts = nodes; capacity C_e = power tau_e,
+  router top-k choice = the task's initial placement,
+  per-expert exclusive position scan = the paper's load scan ``S``,
+  overflow re-route = the sender/receiver migration: overflow tokens form an
+  ordered stream that is carved into the *free-capacity intervals* of
+  under-loaded experts by exclusive scans (``owner_of_fraction`` in integer
+  form) — instead of being dropped, as plain capacity routing does.
+
+Everything is jnp (no sort, no host callback): O(T*E) one-hot cumsums, so it
+jits, shards (token axis = data, expert ff = model) and differentiates
+(combine weights carry the router gradient; positions are integers).
+
+Two lowering modes for the expert data movement (see EXPERIMENTS §Perf):
+  * index form (default): scatter tokens into (E, C) slots, gather back —
+    zero matmul FLOPs for dispatch;
+  * dense form (`DispatchResult.dense()`): GShard-style (T, E, C) one-hot
+    einsum tensors — the classic formulation, kept as the MXU-friendly
+    baseline and for cost comparison.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DispatchResult", "dispatch", "dispatch_grouped", "router_aux_loss"]
+
+
+@dataclass
+class DispatchResult:
+    """Slot assignment for one token group.
+
+    expert_idx: (T, k) destination expert per token-slot.
+    slot_idx:   (T, k) position within the expert's capacity buffer.
+    keep:       (T, k) bool — assignment survived (not dropped).
+    weight:     (T, k) combine weight (normalised router prob).
+    capacity:   C (static).
+    aux:        dict of scalars (overflow/rebalanced/dropped/load stats).
+    """
+
+    expert_idx: jax.Array
+    slot_idx: jax.Array
+    keep: jax.Array
+    weight: jax.Array
+    capacity: int
+    n_experts: int
+    aux: dict
+
+    # (registered as a pytree below: capacity/n_experts are static metadata
+    # so DispatchResult flows through vmap/jit)
+
+    def slot_to_token(self):
+        """(E, C) token index feeding each expert slot + (E, C) validity."""
+        t_len, k = self.expert_idx.shape
+        e = self.n_experts
+        flat_tok = jnp.broadcast_to(
+            jnp.arange(t_len, dtype=jnp.int32)[:, None], (t_len, k)
+        ).reshape(-1)
+        e_flat = self.expert_idx.reshape(-1)
+        s_flat = self.slot_idx.reshape(-1)
+        keep_flat = self.keep.reshape(-1)
+        # invalid assignments scatter out of range -> dropped by XLA
+        e_safe = jnp.where(keep_flat, e_flat, e)
+        tok = jnp.zeros((e + 1, self.capacity), jnp.int32)
+        tok = tok.at[e_safe, s_flat].set(flat_tok, mode="drop")
+        valid = jnp.zeros((e + 1, self.capacity), jnp.bool_)
+        valid = valid.at[e_safe, s_flat].set(True, mode="drop")
+        return tok[:e], valid[:e]
+
+    def dense(self, dtype=jnp.float32):
+        """GShard-style (T, E, C) dispatch/combine tensors."""
+        e_oh = jax.nn.one_hot(self.expert_idx, self.n_experts, dtype=dtype)
+        c_oh = jax.nn.one_hot(self.slot_idx, self.capacity, dtype=dtype)
+        mask = self.keep.astype(dtype)[:, :, None, None]
+        w = (self.weight * self.keep).astype(dtype)
+        d_tensor = jnp.einsum("tke,tkc->tec", e_oh * mask[..., 0], c_oh)
+        combine = jnp.einsum("tke,tkc->tec", e_oh * w[..., None], c_oh)
+        return d_tensor, combine
+
+
+jax.tree_util.register_dataclass(
+    DispatchResult,
+    data_fields=["expert_idx", "slot_idx", "keep", "weight", "aux"],
+    meta_fields=["capacity", "n_experts"],
+)
+
+
+def _positions_in_expert(onehot: jax.Array, base: jax.Array) -> jax.Array:
+    """Exclusive per-expert position of each token (the paper's load scan).
+
+    onehot: (T, E) 0/1 assignment; base: (E,) already-filled slots.
+    Returns (T,) position of each token within its chosen expert.
+    """
+    cum = jnp.cumsum(onehot, axis=0) - onehot  # exclusive scan per expert
+    return ((cum + base[None, :]) * onehot).sum(axis=-1)
+
+
+def _positions_scan(topk_idx: jax.Array, n_exp: int, capacity: int):
+    """Slot-priority positions via per-expert one-hot exclusive scans — the
+    paper's formulation, literally (and what the Pallas ``psts_dispatch``
+    kernel computes with the one-hot kept in VMEM). HBM traffic in the XLA
+    lowering is O(T*k*E) for the scanned one-hots."""
+    t_len, k = topk_idx.shape
+    filled = jnp.zeros((n_exp,), jnp.int32)
+    slot_idx, keep = [], []
+    # priority slots: all first choices place before any second choice
+    for s in range(k):
+        e_s = topk_idx[:, s]
+        onehot = jax.nn.one_hot(e_s, n_exp, dtype=jnp.int32)
+        pos = _positions_in_expert(onehot, filled).astype(jnp.int32)
+        ok = pos < capacity
+        filled = filled + (onehot * ok[:, None]).sum(axis=0)
+        slot_idx.append(pos)
+        keep.append(ok)
+    return jnp.stack(slot_idx, axis=1), jnp.stack(keep, axis=1), filled
+
+
+def _positions_sort(topk_idx: jax.Array, n_exp: int, capacity: int):
+    """Identical positions via one stable sort over (k*T) keys — O(T*k)
+    traffic instead of O(T*k*E) (beyond-paper XLA lowering; EXPERIMENTS
+    §Perf). Slot-major key order reproduces the slot-priority semantics
+    exactly: within an expert, all slot-0 tokens place before any slot-1
+    token, in token order."""
+    t_len, k = topk_idx.shape
+    kt = t_len * k
+    e_flat = topk_idx.T.reshape(-1)                    # slot-major (k*T,)
+    # unique ascending keys: expert-major, then (slot, token) order
+    keys = e_flat.astype(jnp.int32) * kt + jnp.arange(kt, dtype=jnp.int32)
+    order = jnp.argsort(keys)
+    sorted_e = e_flat[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_exp), side="left")
+    pos_sorted = jnp.arange(kt, dtype=jnp.int32) - seg_start[sorted_e]
+    pos_flat = jnp.zeros((kt,), jnp.int32).at[order].set(pos_sorted)
+    slot_idx = pos_flat.reshape(k, t_len).T            # (T, k)
+    keep = slot_idx < capacity
+    counts = jnp.searchsorted(sorted_e, jnp.arange(n_exp), side="right") \
+        - seg_start
+    filled = jnp.minimum(counts, capacity).astype(jnp.int32)
+    return slot_idx, keep, filled
+
+
+def dispatch(
+    router_logits: jax.Array,   # (T, E)
+    k: int,
+    capacity: int,
+    rebalance: bool = True,
+    position_method: str = "scan",
+) -> DispatchResult:
+    """Capacity-limited top-k dispatch with optional PSTS overflow re-route.
+
+    position_method: "scan" (paper-faithful one-hot scans; the Pallas kernel
+    fuses this on TPU) or "sort" (equivalent positions, O(E) less HBM
+    traffic in the pure-XLA lowering).
+    """
+    t_len, n_exp = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    _, topk_idx = jax.lax.top_k(router_logits, k)      # (T, k)
+
+    fn = {"scan": _positions_scan, "sort": _positions_sort}[position_method]
+    slot_idx, keep, filled = fn(topk_idx, n_exp, capacity)
+    expert_idx = topk_idx
+    weight = jnp.take_along_axis(probs, topk_idx, axis=1)  # (T, k)
+    n_overflow = (~keep).sum()
+
+    n_rebalanced = jnp.int32(0)
+    if rebalance:
+        # ---- the paper's sender/receiver pass -----------------------------
+        # overflow token-slots, ordered token-major (the scan order)
+        over = (~keep).reshape(-1)                     # (T*k,)
+        over_pos = jnp.cumsum(over) - over             # exclusive stream idx
+        free = capacity - filled                       # (E,) receiver deficit
+        g = jnp.cumsum(free) - free                    # (E,) interval starts
+        total_free = free.sum()
+        # receiver owning stream position o (zero-free experts own empty
+        # intervals — searchsorted(side=right)-1 skips them, exactly
+        # core.pslb.owner_of_fraction in integer form)
+        o = over_pos
+        dest = jnp.searchsorted(g, o, side="right").astype(jnp.int32) - 1
+        dest = jnp.clip(dest, 0, n_exp - 1)
+        valid = over & (o < total_free)
+        slot_new = (o - g[dest] + filled[dest]).astype(jnp.int32)
+        dest2d = dest.reshape(t_len, k)
+        slot2d = slot_new.reshape(t_len, k)
+        valid2d = valid.reshape(t_len, k)
+        # re-routed weight = router affinity for the actual destination
+        token_ids = jnp.arange(t_len)[:, None]
+        w_new = probs[token_ids, dest2d]
+        expert_idx = jnp.where(valid2d, dest2d, expert_idx)
+        slot_idx = jnp.where(valid2d, slot2d, slot_idx)
+        weight = jnp.where(valid2d, w_new, weight)
+        keep = keep | valid2d
+        n_rebalanced = valid.sum()
+
+    # normalise combine weights over the token's surviving assignments
+    weight = weight * keep
+    denom = weight.sum(axis=1, keepdims=True)
+    weight = jnp.where(denom > 0, weight / jnp.maximum(denom, 1e-9), 0.0)
+
+    load = jax.nn.one_hot(topk_idx[:, 0], n_exp, dtype=jnp.float32).mean(0)
+    aux = {
+        "overflow": n_overflow,
+        "rebalanced": n_rebalanced,
+        "dropped": (~keep).sum(),
+        "top1_load": load,
+        "mean_prob": probs.mean(axis=0),
+    }
+    return DispatchResult(expert_idx, slot_idx, keep, weight,
+                          capacity, n_exp, aux)
+
+
+def dispatch_grouped(
+    router_logits: jax.Array,   # (G, g, E)
+    k: int,
+    capacity: int,
+    rebalance: bool = True,
+):
+    """vmap of :func:`dispatch` over token groups (the data-parallel unit)."""
+    fn = partial(dispatch, k=k, capacity=capacity, rebalance=rebalance)
+    return jax.vmap(fn)(router_logits)
+
+
+def router_aux_loss(router_logits: jax.Array, k: int) -> jax.Array:
+    """Switch/GShard load-balancing loss: E * sum_e f_e * p_e  (+ z-loss)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    n_exp = router_logits.shape[-1]
+    flat = probs.reshape(-1, n_exp)
+    _, topk_idx = jax.lax.top_k(flat, k)
+    f = jax.nn.one_hot(topk_idx, n_exp,
+                       dtype=jnp.float32).sum(axis=1).mean(axis=0)
+    p = flat.mean(axis=0)
+    balance = n_exp * jnp.sum(f * p)
+    z = jnp.mean(jax.nn.logsumexp(router_logits.astype(jnp.float32),
+                                  axis=-1) ** 2)
+    return balance + 1e-3 * z

@@ -1,0 +1,5 @@
+"""Serving substrate: continuous-batching engine over prefill/decode."""
+
+from .engine import Engine, GenRequest
+
+__all__ = ["Engine", "GenRequest"]

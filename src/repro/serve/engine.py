@@ -1,0 +1,145 @@
+"""Serving engine: slot-based continuous batching over the LM's prefill /
+decode paths, plus a multi-replica front-end that routes and rebalances via
+the PSTS request scheduler (DESIGN.md section 3.3).
+
+One Engine = one model replica: a fixed pool of KV/state slots; admissions
+prefill into free slots (bucketed prompt lengths to bound recompilation);
+``step()`` decodes every active slot in one batched call."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Engine", "GenRequest"]
+
+
+@dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: int | None = None
+    generated: list = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 4096) * 4096
+
+
+class Engine:
+    def __init__(self, lm, params, *, slots: int, max_len: int,
+                 greedy: bool = True, seed: int = 0):
+        self.lm = lm
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = lm.init_cache(slots, max_len)
+        self.lengths = np.zeros(slots, dtype=np.int32)
+        self.last_token = np.zeros(slots, dtype=np.int32)
+        self.active: list[GenRequest | None] = [None] * slots
+        self._rng = jax.random.key(seed)
+        self._decode = jax.jit(lm.decode_step)
+        self._prefill = jax.jit(lm.prefill)
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def admit(self, requests: list[GenRequest]) -> list[GenRequest]:
+        """Prefill a batch of requests into free slots; returns admitted."""
+        free = self.free_slots()
+        batch = requests[:len(free)]
+        if not batch:
+            return []
+        s_max = _bucket(max(len(r.prompt) for r in batch))
+        toks = np.zeros((len(batch), s_max), dtype=np.int32)
+        lens = np.zeros(len(batch), dtype=np.int32)
+        for i, r in enumerate(batch):
+            toks[i, :len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+        # small scratch cache for the prefill batch, then scatter into slots
+        scratch = self.lm.init_cache(len(batch), self.max_len)
+        logits, scratch = self._prefill(self.params, scratch,
+                                        jnp.asarray(toks), jnp.asarray(lens))
+        next_tok = self._sample(logits)
+        slot_idx = np.array(free[:len(batch)])
+        self.cache = jax.tree.map(
+            lambda big, small: big.at[:, slot_idx].set(small),
+            self.cache, scratch)
+        for i, r in enumerate(batch):
+            slot = int(slot_idx[i])
+            r.slot = slot
+            tok = int(next_tok[i])
+            r.generated.append(tok)
+            self.active[slot] = r
+            self.lengths[slot] = lens[i]
+            self.last_token[slot] = tok
+            self._maybe_finish(r)
+        return batch
+
+    def _sample(self, logits):
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._rng, sub = jax.random.split(self._rng)
+        return np.asarray(jax.random.categorical(sub, logits, axis=-1))
+
+    def _maybe_finish(self, r: GenRequest):
+        if r.eos_id is not None and r.generated and \
+                r.generated[-1] == r.eos_id:
+            r.done = True
+        if len(r.generated) >= r.max_new_tokens:
+            r.done = True
+        if self.lengths[r.slot] + 1 >= self.max_len:
+            r.done = True
+        if r.done:
+            self.active[r.slot] = None
+
+    def step(self) -> list[GenRequest]:
+        """One decode step for all active slots; returns finished requests."""
+        if self.n_active == 0:
+            return []
+        tokens = jnp.asarray(self.last_token[:, None])
+        lengths = jnp.asarray(self.lengths)
+        logits, self.cache = self._decode(self.params, self.cache, tokens,
+                                          lengths)
+        next_tok = self._sample(logits[:, 0])
+        finished = []
+        for slot, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.lengths[slot] += 1
+            tok = int(next_tok[slot])
+            r.generated.append(tok)
+            self.last_token[slot] = tok
+            self._maybe_finish(r)
+            if r.done:
+                finished.append(r)
+        return finished
+
+    def run(self, requests: list[GenRequest], max_steps: int = 10_000):
+        """Drive admissions + decoding until all requests finish."""
+        pending = list(requests)
+        done: list[GenRequest] = []
+        for _ in range(max_steps):
+            if pending and self.free_slots():
+                admitted = self.admit(pending)
+                pending = pending[len(admitted):]
+                done += [r for r in admitted if r.done]
+            done += self.step()
+            if not pending and self.n_active == 0:
+                break
+        return done

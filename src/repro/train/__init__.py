@@ -1,0 +1,8 @@
+"""Training substrate: state, jitted step, fault-tolerant host loop."""
+
+from .loop import LoopConfig, train
+from .state import TrainState, init_state
+from .step import make_train_step
+
+__all__ = ["LoopConfig", "train", "TrainState", "init_state",
+           "make_train_step"]

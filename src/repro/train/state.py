@@ -1,0 +1,25 @@
+"""Training state pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from ..optim.adamw import AdamW, AdamWState
+
+__all__ = ["TrainState", "init_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+    @property
+    def step(self):
+        return self.opt.step
+
+
+def init_state(lm, optimizer: AdamW, key) -> TrainState:
+    params = lm.init(key)
+    return TrainState(params=params, opt=optimizer.init(params))

@@ -1,0 +1,109 @@
+"""The jitted train step: loss -> grads (optionally microbatched) ->
+[optional int8 DCN compression] -> clip -> AdamW update. Pure function of
+(state, batch); shardable via in_shardings and the logical-axis rules bound
+by the launcher."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamW, clip_by_global_norm
+from ..optim.compress import CompressionState, compress, decompress
+from .state import TrainState
+
+__all__ = ["make_train_step", "CompressedTrainState"]
+
+
+class CompressedTrainState(NamedTuple):
+    """TrainState + the error-feedback buffers of DCN grad compression."""
+    inner: TrainState
+    comp: CompressionState
+
+
+def make_train_step(lm, optimizer: AdamW, lr_schedule, *, remat: bool = True,
+                    clip_norm: float = 1.0, microbatches: int = 1,
+                    compress_dcn: bool = False):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    batch: {"tokens": (B, S), "labels": (B, S), optional "prefix_embed"}.
+    With ``microbatches > 1`` the global batch splits along axis 0 and
+    gradients accumulate in f32 through a lax.scan (sequential, memory-
+    bounded — the standard large-batch trick).
+
+    ``compress_dcn=True`` passes gradients through int8 symmetric
+    quantisation with error feedback before the optimizer — the payload the
+    cross-pod (DCN) reduce would carry at 1/4 the bf16 bytes. The state
+    becomes a ``CompressedTrainState`` carrying the EF buffers."""
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, remat=remat)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            loss, metrics, grads = grads_of(params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                grads_acc, grads)
+            return (loss_acc + loss / microbatches, grads_acc), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), metrics = jax.lax.scan(body, (jnp.float32(0), zeros),
+                                              micro)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def _core(state: TrainState, batch, grads, loss, metrics):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_schedule(state.opt.step)
+        params, opt = optimizer.update(grads, state.opt, state.params, lr)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=params, opt=opt), metrics
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            loss, metrics, grads = accumulate(state.params, batch)
+        else:
+            loss, metrics, grads = grads_of(state.params, batch)
+        return _core(state, batch, grads, loss, metrics)
+
+    def train_step_compressed(state: CompressedTrainState, batch):
+        inner = state.inner
+        if microbatches > 1:
+            loss, metrics, grads = accumulate(inner.params, batch)
+        else:
+            loss, metrics, grads = grads_of(inner.params, batch)
+        # int8 + error feedback on the DCN payload (jit-traceable version of
+        # optim.compress.compress_with_feedback)
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = compress(corrected)
+            deq = decompress(q, s)
+            return deq, corrected - deq
+        flat = jax.tree.map(one, grads, state.comp.error)
+        grads = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        errs = jax.tree.map(lambda t: t[1], flat,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        new_inner, metrics = _core(inner, batch, grads, loss, metrics)
+        return (CompressedTrainState(new_inner, CompressionState(errs)),
+                metrics)
+
+    return train_step_compressed if compress_dcn else train_step

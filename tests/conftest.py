@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests are documented to run with PYTHONPATH=src; make that robust.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

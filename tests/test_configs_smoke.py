@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced config, one forward and one
+train-gradient step on CPU, asserting shapes and numerics health.
+
+Full configs are exercised only by the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, SHAPES, arch_shape_cells, get_config
+from repro.models import LM
+
+ARCHS = sorted(REGISTRY)
+
+
+def test_registry_complete():
+    assert len(REGISTRY) == 10
+    assert {c.family for c in REGISTRY.values()} == {
+        "audio", "ssm", "moe", "dense", "vlm", "hybrid"}
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_exact_published_config(name):
+    cfg = get_config(name)
+    # spot-check the assigned table
+    table = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }[name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == table
+    assert cfg.source
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_train_step(name):
+    cfg = get_config(name).smoke()
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.prefix_len:
+        batch["prefix_embed"] = jax.random.normal(
+            jax.random.key(2), (b, cfg.prefix_len, cfg.prefix_dim))
+
+    logits, aux = lm.apply(params, tokens,
+                           prefix_embed=batch.get("prefix_embed"))
+    assert logits.shape == (b, s, cfg.vocab_padded)
+    assert jnp.isfinite(logits).all(), f"{name}: non-finite logits"
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss(p, batch), has_aux=True)(params)
+    assert jnp.isfinite(loss), f"{name}: non-finite loss"
+    assert all(jnp.isfinite(g).all() for g in jax.tree.leaves(grads))
+    # one SGD step moves the loss (sanity that grads point somewhere)
+    params2 = jax.tree.map(lambda p, g: p - 1e-2 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = lm.loss(params2, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_decode_step(name):
+    cfg = get_config(name).smoke()
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+    cache = lm.init_cache(batch=2, max_len=32)
+    logits, cache2 = lm.decode_step(params, cache,
+                                    jnp.zeros((2, 1), jnp.int32),
+                                    jnp.array([0, 5]))
+    assert logits.shape == (2, 1, cfg.vocab_padded)
+    assert jnp.isfinite(logits).all()
+    # cache actually updated
+    changed = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda x, y: bool((x != y).any()), cache, cache2),
+        False)
+    assert changed
+
+
+def test_param_counts_in_published_ballpark():
+    """n_params() should land near the advertised model sizes."""
+    expect = {
+        "grok-1-314b": (290e9, 340e9),
+        "qwen1.5-32b": (30e9, 36e9),
+        "falcon-mamba-7b": (6.5e9, 8e9),
+        "olmo-1b": (1.0e9, 1.4e9),
+        "gemma3-4b": (3.2e9, 5e9),
+        "nemotron-4-15b": (14e9, 17e9),
+        "jamba-v0.1-52b": (48e9, 56e9),
+        "granite-moe-1b-a400m": (1.0e9, 1.5e9),
+        "internvl2-1b": (0.4e9, 1.0e9),    # LM backbone only (ViT is a stub)
+        "musicgen-large": (1.3e9, 2.5e9),  # decoder only
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).n_params()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_less_than_total_for_moe():
+    for name in ("grok-1-314b", "granite-moe-1b-a400m", "jamba-v0.1-52b"):
+        cfg = get_config(name)
+        assert cfg.n_active_params() < cfg.n_params()
+
+
+def test_cell_enumeration():
+    cells = arch_shape_cells()
+    # 10 archs x 4 shapes - 7 pure-attention long_500k skips = 33
+    assert len(cells) == 33
+    skipped = [c for c in arch_shape_cells(include_skipped=True) if c[2]]
+    assert len(skipped) == 7
+    assert SHAPES["long_500k"].global_batch == 1

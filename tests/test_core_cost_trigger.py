@@ -1,0 +1,113 @@
+"""Cost model (eqs. 8-12), crossover trigger (Tables 6-7 mechanics)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CrossoverTrigger,
+    HyperGrid,
+    TpuCostModel,
+    crossover_imbalance,
+    embed,
+    execution_time,
+    imbalance,
+    optimal_cost,
+    optimal_dim,
+    scan_steps,
+    step_cost,
+)
+
+
+def test_eq8_dim1():
+    # S^1 = 2(n-1)(p+q)
+    assert step_cost((16,), p=2.0, q=3.0) == 2 * 15 * 5
+
+
+def test_eq9_dim2():
+    assert step_cost((4, 8), 1.0, 1.0) == 2 * (4 + 8 - 2) * 2
+
+
+def test_eq11_general():
+    dims = (2, 3, 4, 5)
+    assert scan_steps(dims) == 2 * (14 - 4)
+
+
+def test_eq12_optimal():
+    # at d* all sides are 2: S = 2 log2(n) (p+q)
+    assert optimal_cost(64, 1.0, 1.0) == 2 * 6 * 2
+    assert optimal_cost(100, 0.5, 0.5) == 2 * 7 * 1.0
+
+
+def test_execution_time_decreases_with_nodes():
+    """The measured Fig. 4/5 behaviour: overhead shrinks as nodes grow
+    because the O(m/n) local placement dominates the step count."""
+    times = [
+        execution_time((n,), n, m_tasks=4000, p=0.2, q=0.02, t_task=0.5)
+        for n in (2, 4, 8, 16, 32, 64)
+    ]
+    assert times == sorted(times, reverse=True)
+
+
+def test_higher_dim_cheaper():
+    # fig 5: d>1 strictly cheaper than d=1 at same node count
+    t1 = execution_time((16,), 16, 4000, 0.2, 0.02, t_task=0.5)
+    t2 = execution_time((4, 4), 16, 4000, 0.2, 0.02, t_task=0.5)
+    t4 = execution_time((2, 2, 2, 2), 16, 4000, 0.2, 0.02, t_task=0.5)
+    assert t4 < t2 < t1
+
+
+def test_crossover_scale():
+    # crossover = overhead / (W/Pi)
+    assert crossover_imbalance(2.0, total_work=100.0, total_power=50.0) == 1.0
+    assert math.isinf(crossover_imbalance(1.0, 0.0, 10.0))
+
+
+def test_imbalance_metric():
+    assert imbalance(np.array([10.0, 10.0]), np.array([1.0, 1.0])) == 0
+    # all load on one of two equal nodes: T_now = 20, T_bal = 10 -> I = 1
+    assert imbalance(np.array([20.0, 0.0]), np.array([1.0, 1.0])) == 1.0
+    # stranded work on a dead node
+    assert math.isinf(imbalance(np.array([1.0, 1.0]),
+                                np.array([0.0, 1.0])))
+
+
+def test_trigger_decision():
+    grid = embed(np.ones(8), d=3)
+    trig = CrossoverTrigger(grid, p=1e-3, q=1e-4)
+    balanced = np.zeros(grid.capacity)
+    balanced[np.nonzero(grid.active)[0]] = 100.0
+    dec = trig.evaluate(balanced, m_tasks=800)
+    assert not dec.trigger and dec.imbalance == pytest.approx(0.0)
+
+    skewed = np.zeros(grid.capacity)
+    skewed[np.nonzero(grid.active)[0][0]] = 800.0
+    dec = trig.evaluate(skewed, m_tasks=800)
+    assert dec.trigger and dec.imbalance == pytest.approx(7.0)
+
+
+def test_arrival_crossover_is_small_and_decreasing():
+    """Table 7 behaviour: rebalancing a single arrival is almost always
+    worth it (crossover well under typical imbalance) and decreases with n."""
+    crosses = []
+    for n in (2, 8, 64):
+        grid = embed(np.ones(n) * 5.0, d=optimal_dim(n) if n > 2 else 1)
+        trig = CrossoverTrigger(grid, p=0.2, q=0.02, t_task=0.5,
+                                packets_per_step=40.0)
+        crosses.append(trig.arrival_crossover(mean_work=2.0, m_tasks=4000))
+    assert all(0 < c < 1.0 for c in crosses)
+    assert crosses == sorted(crosses, reverse=True)
+
+
+def test_tpu_cost_model_log_ladder_invariance():
+    m = TpuCostModel()
+    # more data to migrate costs more
+    assert m.migrate_time((16, 16), 1e9) > m.migrate_time((16, 16), 1e6)
+    # TPU adaptation insight (DESIGN.md sec 2): with log-depth ppermute
+    # ladders the hop count depends only on prod(dims) — the paper's Prop 4.1
+    # dimension choice stops mattering for the scan phase; dimension still
+    # matters through migration bisection bandwidth.
+    assert m.scan_time((256,), 64.0) == m.scan_time((16, 16), 64.0)
+    assert m.migrate_time((16, 16), 1e9) < m.migrate_time((256,), 1e9)
+    assert m.rebalance_cost(256, moved_bytes=1e6) > 0

@@ -1,0 +1,126 @@
+"""Paper section 4.2 worked example — Tables 1 through 5, checked exactly.
+
+2-D hyper-grid, 3 x 6 = 18 nodes, 4000 unit tasks. Every number in the
+paper's tables is reproduced by the implementation (including the two
+explicit migration examples: a v22 unit landing on v13 and a v26 unit
+landing on v35).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HyperGrid,
+    exclusive_scan_np,
+    psts_schedule,
+    sender_receiver,
+)
+from repro.core.pslb import split_keep_migrate
+
+# Table 1
+POWERS = np.array(
+    [3, 4, 5, 2, 1, 5,
+     1, 2, 2, 1, 1, 3,
+     5, 1, 4, 2, 6, 2], dtype=np.float64)
+LOADS = np.array(
+    [250, 300, 150, 100, 50, 150,
+     200, 300, 100, 400, 300, 700,
+     200, 50, 50, 200, 300, 200], dtype=np.float64)
+DIMS = (3, 6)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return HyperGrid(DIMS, POWERS)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    """4000 unit tasks placed per Table 1, ordered by node."""
+    node = np.repeat(np.arange(18), LOADS.astype(int))
+    works = np.ones(node.shape[0])
+    return works, node
+
+
+def test_table1_totals(grid):
+    assert grid.total_power == 50
+    assert LOADS.sum() == 4000
+    assert LOADS[:6].sum() == 1000 and LOADS[6:12].sum() == 2000
+
+
+def test_table2_dim1_scans(grid):
+    # G1 row: power scan, gamma, lambda, load scan, total
+    tau1 = POWERS[:6]
+    assert np.array_equal(exclusive_scan_np(tau1), [0, 3, 7, 12, 14, 15])
+    gamma1 = tau1 / tau1.sum()
+    assert np.allclose(gamma1, [0.15, 0.2, 0.25, 0.1, 0.05, 0.25])
+    assert np.allclose(exclusive_scan_np(gamma1),
+                       [0, 0.15, 0.35, 0.60, 0.70, 0.75])
+    assert np.array_equal(exclusive_scan_np(LOADS[:6]),
+                          [0, 250, 550, 700, 800, 850])
+
+
+def test_table3_dim2_scans():
+    pi_r = np.array([20.0, 10.0, 20.0])
+    w_r = np.array([1000.0, 2000.0, 1000.0])
+    assert np.array_equal(exclusive_scan_np(pi_r), [0, 20, 30])
+    assert np.allclose(pi_r / pi_r.sum(), [0.4, 0.2, 0.4])
+    assert np.allclose(exclusive_scan_np(pi_r / pi_r.sum()), [0, 0.4, 0.6])
+    assert np.array_equal(exclusive_scan_np(w_r), [0, 1000, 3000])
+
+
+def test_sender_receiver_classification():
+    fair, excess = sender_receiver(
+        np.array([1000.0, 2000.0, 1000.0]), np.array([20.0, 10.0, 20.0]))
+    assert np.allclose(fair, [1600, 800, 1600])
+    # G2 is the sender (+1200), G1 and G3 receivers (-600 each)
+    assert np.allclose(excess, [-600, 1200, -600])
+
+
+def test_table4_sender_split():
+    """Sender G2 keeps 40% per node: R.W.L = [80,120,40,160,120,280]."""
+    works = np.ones(2000)
+    node = np.repeat(np.arange(6), LOADS[6:12].astype(int))
+    keep = split_keep_migrate(works, node, LOADS[6:12], keep_total=800.0)
+    kept_per_node = np.bincount(node[keep], minlength=6)
+    assert np.array_equal(kept_per_node, [80, 120, 40, 160, 120, 280])
+    migrating = np.bincount(node[~keep], minlength=6)
+    assert np.array_equal(migrating, [120, 180, 60, 240, 180, 420])  # Table 4 M.
+    # S.M. offsets within the outgoing stream: 0,120,300,360,600,780
+    assert np.array_equal(exclusive_scan_np(migrating.astype(float)),
+                          [0, 120, 300, 360, 600, 780])
+
+
+def test_full_schedule_balances_exactly(grid, tasks):
+    works, node = tasks
+    res = psts_schedule(works, node, grid)
+    # final load of every node is W * tau / Pi = 80 * tau (unit tasks: exact)
+    assert np.array_equal(res.loads_after, 80.0 * POWERS)
+    assert np.allclose(res.targets, 80.0 * POWERS)
+    assert res.residual_imbalance < 1e-9
+    # 1200 units crossed the dim-2 boundary (G2's excess)
+    assert res.inter_grid_units[0] == 1200.0
+
+
+def test_table5_migration_examples(grid, tasks):
+    """Paper Table 5: v22's migrating unit k=100 -> v13 (frac 0.37);
+    v26's migrating unit k=200 -> v35 (frac 0.63)."""
+    works, node = tasks
+    res = psts_schedule(works, node, grid)
+    # v22 (grid idx 7) keeps its first 120 tasks; migrating local offsets are
+    # 120..299. k=100 within the outgoing block = local offset 220.
+    base_v22 = int(LOADS[:7].sum())
+    assert res.dest[base_v22 + 220] == 2  # v13
+    # v26 (grid idx 11) keeps 280; k=200 of its outgoing block = offset 480.
+    base_v26 = int(LOADS[:11].sum())
+    assert res.dest[base_v26 + 480] == 16  # v35
+    # G2's kept tasks stay inside G2 and G2 ends at 80*tau
+    g2 = slice(6, 12)
+    assert np.array_equal(res.loads_after[g2], 80.0 * POWERS[g2])
+
+
+def test_receivers_only_gain_senders_only_lose(grid, tasks):
+    works, node = tasks
+    res = psts_schedule(works, node, grid)
+    row_after = res.loads_after.reshape(3, 6).sum(axis=1)
+    assert np.allclose(row_after, [1600, 800, 1600])

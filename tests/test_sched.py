@@ -1,0 +1,117 @@
+"""Scheduling integrations: data balancing, straggler monitor, request
+scheduler (the paper's algorithm at three framework layers)."""
+
+import numpy as np
+import pytest
+
+from repro.sched.data_balance import balance_sequences, sequence_work
+from repro.sched.request_sched import ReplicaScheduler
+from repro.sched.straggler import StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# data balance
+# ---------------------------------------------------------------------------
+
+def test_sequence_work_superlinear():
+    w = sequence_work(np.array([1024, 2048, 4096]))
+    assert w[1] > 2 * w[0]          # quadratic term kicks in
+    assert w[2] > 2 * w[1]
+
+
+def test_balance_sequences_uniform_powers():
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(64, 4096, size=512)
+    res = balance_sequences(lengths, dims=(2, 8))
+    assert res.shard.shape == (512,)
+    assert res.shard.max() < 16
+    # near-uniform work across shards (within one max-sequence work)
+    spread = res.shard_work.max() - res.shard_work.min()
+    assert spread <= sequence_work(np.array([4096]))[0] * 2
+
+
+def test_balance_sequences_straggler_gets_less():
+    rng = np.random.default_rng(1)
+    lengths = rng.integers(64, 2048, size=800)
+    powers = np.ones(8)
+    powers[3] = 0.25                 # one slow host
+    res = balance_sequences(lengths, dims=(8,), powers=powers)
+    mean_other = np.delete(res.shard_work, 3).mean()
+    assert res.shard_work[3] < 0.45 * mean_other
+
+
+def test_balance_hierarchical_pods_first():
+    rng = np.random.default_rng(2)
+    lengths = rng.integers(64, 2048, size=600)
+    # everything initially lands in pod 0
+    init = rng.integers(0, 8, size=600)
+    res = balance_sequences(lengths, dims=(2, 8), initial_shard=init)
+    pod_work = res.shard_work.reshape(2, 8).sum(axis=1)
+    assert abs(pod_work[0] - pod_work[1]) / pod_work.sum() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_powers_track_speed():
+    mon = StragglerMonitor(n_hosts=4)
+    for _ in range(10):
+        mon.update(np.array([1.0, 1.0, 2.0, 1.0]))  # host 2 is 2x slower
+    tau = mon.powers()
+    assert tau[2] < tau[0]
+    assert tau[2] == pytest.approx(tau[0] / 2, rel=0.05)
+    assert mon.stragglers().tolist() == [False, False, True, False]
+
+
+def test_straggler_monitor_dead_host_is_virtual():
+    mon = StragglerMonitor(n_hosts=3, heartbeat_limit=2)
+    for _ in range(3):
+        mon.update({0: 1.0, 1: 1.0})   # host 2 never reports
+    assert not mon.alive[2]
+    assert mon.powers()[2] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# request scheduler
+# ---------------------------------------------------------------------------
+
+def test_arrivals_spread_power_proportionally():
+    sched = ReplicaScheduler(dims=(4,))
+    for _ in range(64):
+        sched.submit(prompt_len=512, max_new_tokens=128)
+    loads = sched.loads()
+    assert loads.min() > 0
+    assert loads.max() / loads.min() < 1.3
+
+
+def test_rebalance_gated_by_crossover():
+    sched = ReplicaScheduler(dims=(4,), trigger_floor=0.2)
+    # balanced arrivals: trigger quiet
+    for _ in range(32):
+        sched.submit(256, 64)
+    assert sched.maybe_rebalance() is None
+
+
+def test_failed_replica_drains():
+    sched = ReplicaScheduler(dims=(4,))
+    for _ in range(40):
+        sched.submit(256, 64)
+    before = sched.loads()
+    assert before[1] > 0
+    plan = sched.fail_replica(1)
+    after = sched.loads()
+    assert after[1] == 0
+    assert plan  # something migrated
+    # migrated requests live on surviving replicas
+    assert all(dst != 1 for _, dst in plan.values())
+
+
+def test_decode_completion():
+    sched = ReplicaScheduler(dims=(2,))
+    r = sched.submit(128, 4)
+    done = []
+    for _ in range(4):
+        done += sched.step_decode()
+    assert r.rid in done
+    assert sched.loads().sum() == 0

@@ -1,0 +1,186 @@
+"""Substrate tests: data pipeline, optimizer, compression, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+from repro.data import DocStream, Pipeline, make_global_batch, pack_documents
+from repro.optim import (
+    AdamW,
+    clip_by_global_norm,
+    compress_with_feedback,
+    decompress,
+    global_norm,
+    init_state,
+    warmup_cosine,
+)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_docstream_deterministic():
+    s = DocStream(vocab_size=100, seed=7)
+    a = s.doc(42)
+    b = s.doc(42)
+    assert np.array_equal(a.tokens, b.tokens)
+    assert len({len(s.doc(i).tokens) for i in range(20)}) > 3  # varied
+
+
+@pytest.mark.parametrize("dist", ["uniform", "poisson", "zipf"])
+def test_docstream_distributions(dist):
+    s = DocStream(vocab_size=50, dist=dist, mean_len=128, max_len=512)
+    lens = [len(s.doc(i).tokens) for i in range(50)]
+    assert all(16 <= n <= 512 for n in lens)
+
+
+def test_packing_no_leak_across_docs():
+    s = DocStream(vocab_size=100, mean_len=40, max_len=100, seed=1)
+    docs = s.docs(0, 8)
+    pb = pack_documents(docs, rows=4, seq_len=128)
+    assert pb.tokens.shape == (4, 128)
+    # labels at doc boundaries are -1 (no cross-document prediction)
+    for r in range(4):
+        lab = pb.labels[r]
+        # every label either -1 or the next token in the same buffer
+        valid = lab >= 0
+        assert (lab[valid] == pb.tokens[r][1:][valid[:-1]]).all() if \
+            valid[:-1].any() else True
+
+
+def test_global_batch_shapes_and_balance():
+    s = DocStream(vocab_size=100, mean_len=100, max_len=400, seed=2)
+    docs = s.docs(0, 200)
+    toks, labs, stats = make_global_batch(docs, (2, 4), rows_per_shard=4,
+                                          seq_len=512)
+    assert toks.shape == (2 * 4 * 4, 512)
+    assert labs.shape == toks.shape
+    works = np.array([st["work"] for st in stats])
+    assert works.max() / max(works.mean(), 1e-9) < 1.5
+
+
+def test_pipeline_resumable():
+    s = DocStream(vocab_size=100, seed=3)
+    p = Pipeline(s, shard_dims=(4,), rows_per_shard=2, seq_len=256)
+    b1, _ = p.batch(5)
+    b2, _ = p.batch(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    opt = AdamW(weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw w^2
+        params, state = opt.update(grads, state, params, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert int(state.step) == 200
+
+
+def test_adamw_bf16_moments():
+    opt = AdamW(moments_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    p2, s2 = opt.update({"w": jnp.ones((4, 4))}, state, params, 1e-2)
+    assert p2["w"].dtype == params["w"].dtype
+    assert s2.v["w"].dtype == jnp.bfloat16
+
+
+def test_weight_decay_skips_vectors():
+    opt = AdamW(weight_decay=1.0)
+    params = {"w": jnp.ones((2, 2)), "scale": jnp.ones((2,))}
+    state = opt.init(params)
+    zero = jax.tree.map(jnp.zeros_like, params)
+    p2, _ = opt.update(zero, state, params, lr=0.1)
+    assert float(p2["w"][0, 0]) < 1.0      # decayed
+    assert float(p2["scale"][0]) == 1.0    # exempt
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedule_warmup_cosine():
+    sch = warmup_cosine(1e-3, warmup_steps=10, total_steps=100)
+    assert float(sch(0)) == 0.0
+    assert float(sch(10)) == pytest.approx(1e-3)
+    assert float(sch(100)) == pytest.approx(1e-4, rel=1e-3)
+    assert float(sch(5)) == pytest.approx(5e-4)
+
+
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    state = init_state(g)
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for _ in range(50):
+        total_true += np.asarray(g["w"])
+        (q, s), state = compress_with_feedback(g, state)
+        total_sent += np.asarray(decompress(q["w"], s["w"]))
+    # accumulated error stays bounded by one quantisation step
+    resid = np.abs(total_true - total_sent).max()
+    assert resid < float(np.abs(g["w"]).max()) / 127 * 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, 7, _tree(), metadata={"note": "x"})
+    assert latest_step(d) == 7
+    step, tree, meta = restore(d, jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 7 and meta["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.asarray(_tree()["a"]))
+
+
+def test_restore_validates_shape(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, 1, _tree())
+    bad = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.zeros((4,), jnp.int32)}}
+    with pytest.raises((ValueError, KeyError)):
+        restore(d, bad)
+
+
+def test_async_checkpointer_and_prune(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = Checkpointer(d, keep_last=2)
+    for s in (1, 2, 3):
+        ck.save_async(s, _tree())
+    ck.wait()
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2
+    assert latest_step(d) == 3
+
+
+def test_corruption_detected(tmp_path):
+    d = str(tmp_path / "ck")
+    path = save(d, 1, _tree())
+    npz = os.path.join(path, "arrays.npz")
+    data = dict(np.load(npz))
+    data["a"] = data["a"] + 1  # silent bit-flip
+    np.savez(npz, **data)
+    with pytest.raises(ValueError, match="hash"):
+        restore(d, _tree())

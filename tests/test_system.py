@@ -1,0 +1,69 @@
+"""End-to-end behaviour of the paper's system: trigger -> schedule -> verify,
+including the elastic (node-failure) path.
+
+Model/train/serve end-to-end flows live in test_train_integration.py and
+test_serve.py; this file exercises the scheduling core as a system.
+"""
+
+import numpy as np
+
+from repro.core import (
+    CrossoverTrigger,
+    SimConfig,
+    embed,
+    imbalance,
+    psts_schedule,
+    simulate,
+)
+
+
+def test_trigger_then_schedule_round_trip():
+    """A skewed cluster: the trigger fires, PSTS balances, the trigger then
+    stays quiet — the paper's intended operating loop."""
+    rng = np.random.default_rng(0)
+    powers = rng.integers(1, 10, size=24).astype(float)
+    grid = embed(powers)  # paper-optimal dimension
+    works = rng.integers(1, 20, size=3000).astype(float)
+    active = np.nonzero(grid.active)[0]
+    # heavily skewed: most tasks on three nodes
+    node = active[rng.choice([0, 1, 2], size=3000)]
+
+    trig = CrossoverTrigger(grid, p=1e-4, q=1e-5, t_task=1e-4, floor=0.01)
+    loads = np.bincount(node, weights=works, minlength=grid.capacity)
+    before = trig.evaluate(loads, m_tasks=3000)
+    assert before.trigger
+
+    res = psts_schedule(works, node, grid)
+    after = trig.evaluate(res.loads_after, m_tasks=3000)
+    assert after.imbalance < 0.1
+    assert not after.trigger
+
+
+def test_failure_rebalance_recovery():
+    """Elasticity: a node dies (becomes virtual), PSTS drains it, and the
+    remaining nodes end power-proportional."""
+    grid = embed(np.full(16, 4.0), d=4)
+    rng = np.random.default_rng(1)
+    active = np.nonzero(grid.active)[0]
+    node = active[rng.integers(0, active.size, size=4000)]
+    works = np.ones(4000)
+
+    failed = grid.fail(int(active[3]))
+    assert np.isinf(imbalance(
+        np.bincount(node, weights=works, minlength=grid.capacity),
+        failed.powers))  # stranded work detected
+
+    res = psts_schedule(works, node, failed)
+    assert res.loads_after[active[3]] == 0
+    live = failed.active
+    assert np.abs(res.loads_after[live] - 4000 / 15).max() <= 2.0
+
+
+def test_simulator_end_to_end_consistency():
+    r = simulate(SimConfig(n_nodes=48, d=6, seed=9))
+    # balanced state is consistent with the reported imbalance
+    assert r.imbalance_after < 0.2
+    assert r.makespan_after < r.makespan_before
+    # moved bookkeeping is self-consistent
+    assert 0 < r.moved_tasks <= r.config.m_tasks
+    assert r.moved_units <= r.config.m_tasks * (2 * r.config.work_mean)
