@@ -1,0 +1,129 @@
+"""Event-driven cluster-runtime benchmarks (ISSUE 1 acceptance criteria).
+
+* ``policy_grid`` — policies x arrival processes x failure on/off under the
+  event engine, reporting mean/P99 response, migration volume and trigger
+  fires; asserts the headline shape: PSTS-with-trigger achieves lower mean
+  response time than place-on-arrival-only under bursty arrivals.
+* ``vector_sweep`` — >= 100 scenario seeds in ONE batched lax.scan call,
+  asserting per-seed agreement with the scalar reference engine to float
+  tolerance, and reporting the batched-vs-Python-loop speed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.runtime import (
+    VectorConfig,
+    batch_slots,
+    make_workload,
+    run_policy,
+    simulate_batch,
+    simulate_scalar,
+)
+
+N_NODES = 16
+POWERS = np.random.default_rng(0).integers(1, 10, size=N_NODES).astype(float)
+
+# heavy-burst regime: offered load during bursts exceeds cluster power, so
+# queues build and rebalancing has something to do
+PROCESSES = {
+    "poisson": dict(rate=8.0, work_mean=6.0),
+    "bursty": dict(rate_lo=0.5, rate_hi=18.0, sojourn_lo=25.0,
+                   sojourn_hi=6.0, work_mean=6.0),
+    "diurnal": dict(rate_mean=8.0, amplitude=0.9, period=80.0,
+                    work_mean=6.0),
+}
+POLICIES = ("jsq", "arrival_only", "psts")
+HORIZON = 200.0
+SEEDS = (0, 1)
+FAILURES = [(40.0, 2), (90.0, 11)]
+JOINS = [(130.0, 2)]
+
+
+def _run(policy: str, process: str, fail: bool, seed: int):
+    wl = make_workload(process, horizon=HORIZON, seed=seed,
+                       **PROCESSES[process])
+    kwargs = {}
+    if policy == "psts":
+        kwargs = {"policy_kwargs": {"floor": 0.05}, "trigger_period": 1.0,
+                  "bandwidth": 256.0}
+    t0 = time.perf_counter()
+    m = run_policy(policy, wl, POWERS, seed=7,
+                   failures=FAILURES if fail else (),
+                   joins=JOINS if fail else (), **kwargs)
+    us = (time.perf_counter() - t0) * 1e6
+    assert m.completed == m.arrived, (policy, process, fail, seed)
+    return m, us
+
+
+def policy_grid() -> list[tuple[str, float, str]]:
+    rows = []
+    means: dict[tuple, float] = {}
+    for process in PROCESSES:
+        for fail in (False, True):
+            for policy in POLICIES:
+                ms, us = [], 0.0
+                for seed in SEEDS:
+                    m, dt = _run(policy, process, fail, seed)
+                    ms.append(m)
+                    us += dt
+                mean = float(np.mean([m.mean_response for m in ms]))
+                p99 = float(np.mean([m.p99_response for m in ms]))
+                means[(process, fail, policy)] = mean
+                tag = f"{process}{'+fail' if fail else ''}"
+                rows.append((
+                    f"runtime/{tag}/{policy}", us / len(SEEDS),
+                    f"mean_resp={mean:.3f};p99_resp={p99:.3f};"
+                    f"migrations={sum(m.migrations for m in ms)};"
+                    f"fires={sum(m.trigger_fires for m in ms)};"
+                    f"restarts={sum(m.restarts for m in ms)}"))
+    # acceptance shape: the trigger pays under bursts, with and without
+    # failures in play
+    for fail in (False, True):
+        psts = means[("bursty", fail, "psts")]
+        arr = means[("bursty", fail, "arrival_only")]
+        assert psts < arr, (
+            f"PSTS {psts:.3f} must beat arrival-only {arr:.3f} "
+            f"under bursty arrivals (fail={fail})")
+    return rows
+
+
+def vector_sweep() -> list[tuple[str, float, str]]:
+    n_seeds = 128
+    cfg = VectorConfig(n_nodes=N_NODES, n_slots=int(HORIZON), dt=1.0,
+                       rebalance=True, floor=0.1)
+    wls = [make_workload("poisson", horizon=HORIZON, seed=s,
+                         **PROCESSES["poisson"]) for s in range(n_seeds)]
+    slot, works, _ = batch_slots(wls, cfg.dt, cfg.n_slots)
+
+    simulate_batch(slot[:2], works[:2], POWERS, cfg)  # compile
+    t0 = time.perf_counter()
+    bm = simulate_batch(slot, works, POWERS, cfg)
+    us_batch = (time.perf_counter() - t0) * 1e6
+
+    # scalar reference over a sample of seeds: agreement + loop cost
+    sample = range(0, n_seeds, 8)
+    max_err = 0.0
+    t0 = time.perf_counter()
+    for i in sample:
+        sm = simulate_scalar(slot[i], works[i], POWERS, cfg)
+        for k, v in sm.items():
+            b = float(getattr(bm, k)[i])
+            err = abs(b - v) / max(abs(v), 1e-12)
+            max_err = max(max_err, err)
+            assert err < 1e-6, (i, k, b, v)
+    us_scalar = (time.perf_counter() - t0) / len(list(sample)) * 1e6
+
+    return [
+        (f"runtime/vector_sweep/seeds={n_seeds}", us_batch,
+         f"us_per_seed={us_batch / n_seeds:.1f};"
+         f"scalar_us_per_seed={us_scalar:.1f};"
+         f"max_rel_err={max_err:.2e};"
+         f"mean_resp={float(bm.mean_response.mean()):.3f}"),
+    ]
+
+
+ALL = [policy_grid, vector_sweep]

@@ -35,6 +35,11 @@ def _suites():
         suites.append(("ablation", bench_ablation.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_runtime
+        suites.append(("runtime", bench_runtime.ALL))
+    except ImportError:
+        pass
     return suites
 
 

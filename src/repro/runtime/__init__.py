@@ -1,0 +1,36 @@
+"""Event-driven dynamic cluster runtime (DESIGN: runtime subsystem).
+
+Drives the hypergrid/PSTS/trigger core through time: staggered arrivals,
+nonpreemptive FIFO service, node failures/joins, in-flight migrations, and
+periodic crossover-trigger evaluation — with pluggable placement policies and
+a vectorized batched-scenario backend for on-accelerator parameter sweeps.
+"""
+
+from .events import Event, EventKind, EventQueue
+from .metrics import Metrics, nearest_rank
+from .policies import POLICIES, Policy, make_policy, positional_arrival
+from .runtime import ClusterRuntime, ClusterView, Task, run_policy
+from .workload import ARRIVAL_PROCESSES, Workload, batch_slots, make_workload
+
+# The vectorized backend pulls in jax + the Pallas prefix-scan kernel; load
+# it lazily so the event engine (and repro.sched importing the policy
+# registry) stays importable without touching kernel code.
+_VECTOR_NAMES = {"BatchMetrics", "VectorConfig", "simulate_batch",
+                 "simulate_scalar", "sweep_seeds"}
+
+
+def __getattr__(name):
+    if name in _VECTOR_NAMES:
+        from . import vector_backend
+        return getattr(vector_backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Event", "EventKind", "EventQueue",
+    "Metrics", "nearest_rank",
+    "POLICIES", "Policy", "make_policy", "positional_arrival",
+    "ClusterRuntime", "ClusterView", "Task", "run_policy",
+    "BatchMetrics", "VectorConfig", "simulate_batch", "simulate_scalar",
+    "sweep_seeds",
+    "ARRIVAL_PROCESSES", "Workload", "batch_slots", "make_workload",
+]

@@ -1,0 +1,69 @@
+"""Discrete-event primitives for the cluster runtime.
+
+A binary-heap clock with a total, deterministic order: events at equal
+timestamps resolve by kind (failures first, so state changes are visible to
+everything else at that instant; trigger evaluations last, so they see the
+instant's arrivals/completions) and then by insertion sequence.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Any
+
+__all__ = ["EventKind", "Event", "EventQueue"]
+
+
+class EventKind(IntEnum):
+    """Tie-break order at equal timestamps (lower = earlier)."""
+
+    NODE_FAIL = 0
+    NODE_JOIN = 1
+    COMPLETION = 2
+    MIGRATION_ARRIVE = 3
+    ARRIVAL = 4
+    TRIGGER_EVAL = 5
+
+
+@dataclass(frozen=True)
+class Event:
+    time: float
+    kind: EventKind
+    payload: Any = None
+
+
+class EventQueue:
+    """Priority queue over ``Event`` with deterministic tie-breaking."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, int, Event]] = []
+        self._seq = 0
+        self._pending: dict[EventKind, int] = {k: 0 for k in EventKind}
+
+    def push(self, time: float, kind: EventKind, payload: Any = None) -> None:
+        ev = Event(float(time), kind, payload)
+        heapq.heappush(self._heap, (ev.time, int(kind), self._seq, ev))
+        self._seq += 1
+        self._pending[kind] += 1
+
+    def pop(self) -> Event:
+        _, _, _, ev = heapq.heappop(self._heap)
+        self._pending[ev.kind] -= 1
+        return ev
+
+    def peek_time(self) -> float:
+        return self._heap[0][0]
+
+    def pending(self, *kinds: EventKind) -> int:
+        """Number of queued events of the given kinds (all kinds if empty)."""
+        if not kinds:
+            return len(self._heap)
+        return sum(self._pending[k] for k in kinds)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

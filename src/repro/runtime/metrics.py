@@ -1,0 +1,85 @@
+"""Shared metrics accumulator for runtime policies.
+
+Every policy run — event engine or vectorized backend — reports through the
+same quantities so policy comparisons are apples-to-apples: makespan, mean and
+P99 response time (completion minus arrival), migration count/volume, trigger
+statistics, and failure restarts.
+
+P99 is nearest-rank (not interpolated) so the scalar engine, the vectorized
+backend and numpy/JAX agree bit-for-bit on small samples.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["Metrics", "nearest_rank"]
+
+
+def nearest_rank(values: np.ndarray, pct: float) -> float:
+    """Nearest-rank percentile: the ceil(pct/100 * n)-th smallest value."""
+    values = np.sort(np.asarray(values, dtype=np.float64))
+    n = values.shape[0]
+    if n == 0:
+        return float("nan")
+    k = min(max(int(math.ceil(pct / 100.0 * n)), 1), n)
+    return float(values[k - 1])
+
+
+@dataclass
+class Metrics:
+    """Accumulator owned by one runtime run."""
+
+    arrived: int = 0
+    completed: int = 0
+    migrations: int = 0
+    moved_packets: float = 0.0
+    moved_units: float = 0.0
+    trigger_evals: int = 0
+    trigger_fires: int = 0
+    restarts: int = 0
+    failures: int = 0
+    joins: int = 0
+    makespan: float = 0.0
+    responses: list[float] = field(default_factory=list)
+    waits: list[float] = field(default_factory=list)
+
+    def observe_arrival(self) -> None:
+        self.arrived += 1
+
+    def observe_completion(self, response: float, wait: float,
+                           t_finish: float) -> None:
+        self.completed += 1
+        self.responses.append(float(response))
+        self.waits.append(float(wait))
+        self.makespan = max(self.makespan, float(t_finish))
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def mean_response(self) -> float:
+        return float(np.mean(self.responses)) if self.responses else float("nan")
+
+    @property
+    def p99_response(self) -> float:
+        return nearest_rank(np.asarray(self.responses), 99.0)
+
+    @property
+    def mean_wait(self) -> float:
+        return float(np.mean(self.waits)) if self.waits else float("nan")
+
+    def summary(self) -> dict:
+        return {
+            "arrived": self.arrived,
+            "completed": self.completed,
+            "makespan": self.makespan,
+            "mean_response": self.mean_response,
+            "p99_response": self.p99_response,
+            "migrations": self.migrations,
+            "moved_packets": self.moved_packets,
+            "trigger_evals": self.trigger_evals,
+            "trigger_fires": self.trigger_fires,
+            "restarts": self.restarts,
+        }

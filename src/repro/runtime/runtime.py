@@ -1,0 +1,310 @@
+"""Event-driven cluster runtime (the paper's dynamic setting, made explicit).
+
+Drives the hypergrid/PSTS/trigger core through time: tasks arrive staggered,
+each node is a FIFO server draining work at its processing power tau, nodes
+fail and rejoin (the paper's virtual-node treatment, section 4.1), and a
+periodic crossover-trigger evaluation decides online when a full PSTS
+rebalance pays (section 5). Operation is nonpreemptive: a task that has
+started service finishes where it is; only *queued* tasks migrate, and a
+migration is in flight for ``packets / bandwidth`` time units during which
+the task is on no node's queue.
+
+Failure semantics: the failed node's queued tasks and its running task are
+re-placed through the policy (the running task restarts from scratch —
+nonpreemptive schedulers cannot checkpoint mid-task). Migrations in flight
+toward a node that died on arrival are re-placed the moment they land.
+
+Every policy (``repro.runtime.policies``) runs under the identical engine and
+reports through the shared ``Metrics`` accumulator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.hypergrid import HyperGrid, embed, optimal_dim
+from ..core.psts import psts_schedule
+from .events import EventKind, EventQueue
+from .metrics import Metrics
+from .policies import Policy, make_policy
+from .workload import Workload
+
+__all__ = ["Task", "ClusterView", "ClusterRuntime", "run_policy"]
+
+
+@dataclass
+class Task:
+    tid: int
+    t_arrive: float
+    work: float
+    packets: float
+    node: int = -1
+    t_start: float | None = None
+    t_finish: float | None = None
+    restarts: int = 0
+    migrations: int = 0
+    # (time, node) history of every placement decision, for invariant checks
+    placements: list[tuple[float, int]] = field(default_factory=list)
+
+    @property
+    def state(self) -> str:
+        if self.t_finish is not None:
+            return "done"
+        if self.t_start is not None:
+            return "running"
+        return "queued" if self.node >= 0 else "in_flight"
+
+
+@dataclass(frozen=True)
+class ClusterView:
+    """What a policy is allowed to see at decision time."""
+
+    time: float
+    grid: HyperGrid
+    loads: np.ndarray          # queued + remaining running work per node
+    m_seen: int                # arrivals so far
+    rng: np.random.Generator   # engine-owned, for stochastic policies
+
+
+class ClusterRuntime:
+    """One cluster, one policy, one metrics accumulator."""
+
+    def __init__(self, powers, policy: str | Policy = "psts", *,
+                 d: int | None = None, trigger_period: float = 2.0,
+                 bandwidth: float = 64.0, seed: int = 0,
+                 policy_kwargs: dict | None = None):
+        powers = np.asarray(powers, dtype=np.float64)
+        self._powers_full = powers.copy()
+        self.grid = embed(powers, optimal_dim(powers.size) if d is None else d)
+        self.policy = make_policy(policy, **(policy_kwargs or {}))
+        self.trigger_period = float(trigger_period)
+        self.bandwidth = float(bandwidth)
+        self.rng = np.random.default_rng(seed)
+        self.metrics = Metrics()
+        self.tasks: dict[int, Task] = {}
+        self._queues: list[list[Task]] = [[] for _ in range(self.grid.capacity)]
+        self._running: list[Task | None] = [None] * self.grid.capacity
+        self._in_flight: set[int] = set()
+        self._eq = EventQueue()
+        self._now = 0.0
+
+    # -- state inspection ---------------------------------------------------
+    def loads(self, t: float) -> np.ndarray:
+        """Queued work plus the remaining work of running tasks."""
+        loads = np.zeros(self.grid.capacity)
+        for n, q in enumerate(self._queues):
+            for task in q:
+                loads[n] += task.work
+            r = self._running[n]
+            if r is not None:
+                done = (t - r.t_start) * self.grid.powers[n]
+                loads[n] += max(r.work - done, 0.0)
+        return loads
+
+    def view(self, t: float) -> ClusterView:
+        return ClusterView(time=t, grid=self.grid, loads=self.loads(t),
+                           m_seen=self.metrics.arrived, rng=self.rng)
+
+    def _outstanding(self) -> int:
+        queued = sum(len(q) for q in self._queues)
+        running = sum(r is not None for r in self._running)
+        return queued + running + len(self._in_flight)
+
+    # -- mechanics ----------------------------------------------------------
+    def _place(self, task: Task, t: float) -> None:
+        """Ask the policy for a node; fall back to the least-loaded active
+        node if it answers with a virtual/failed slot (or, during a total
+        outage, to node 0, where the task queues until a node rejoins)."""
+        try:
+            node = self.policy.on_arrival(task.work, task.packets,
+                                          self.view(t))
+        except ValueError:  # e.g. positional rule with zero active power
+            node = -1
+        if not (0 <= node < self.grid.capacity) or not self.grid.active[node]:
+            loads = self.loads(t)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ratio = np.where(self.grid.active,
+                                 loads / np.maximum(self.grid.powers, 1e-12),
+                                 np.inf)
+            node = int(np.argmin(ratio))
+        task.node = node
+        task.placements.append((t, node))
+        self._queues[node].append(task)
+        self._try_start(node, t)
+
+    def _try_start(self, node: int, t: float) -> None:
+        if self._running[node] is not None or not self._queues[node]:
+            return
+        if not self.grid.active[node]:
+            return
+        task = self._queues[node].pop(0)
+        task.t_start = t
+        self._running[node] = task
+        service = task.work / self.grid.powers[node]
+        self._eq.push(t + service, EventKind.COMPLETION,
+                      (task, node, task.restarts))
+
+    def _strand(self, node: int, t: float) -> list[Task]:
+        """Pull every task off a failed node; running restarts from scratch."""
+        stranded = list(self._queues[node])
+        self._queues[node] = []
+        r = self._running[node]
+        if r is not None:
+            r.t_start = None
+            r.restarts += 1
+            self.metrics.restarts += 1
+            self._running[node] = None
+            stranded.append(r)
+        for task in stranded:
+            task.node = -1
+        return sorted(stranded, key=lambda task: task.tid)
+
+    def _rebalance(self, t: float) -> None:
+        """Migrate queued tasks to the PSTS placement (nonpreemptive: running
+        and in-flight tasks are untouched)."""
+        queued = [task for q in self._queues for task in q]
+        if not queued:
+            return
+        works = np.array([task.work for task in queued])
+        nodes = np.array([task.node for task in queued])
+        res = psts_schedule(works, nodes, self.grid)
+        for task, dst in zip(queued, res.dest):
+            dst = int(dst)
+            if dst == task.node:
+                continue
+            self._queues[task.node].remove(task)
+            task.node = -1
+            task.migrations += 1
+            self._in_flight.add(task.tid)
+            self.metrics.migrations += 1
+            self.metrics.moved_packets += task.packets
+            self.metrics.moved_units += task.work
+            delay = task.packets / self.bandwidth
+            self._eq.push(t + delay, EventKind.MIGRATION_ARRIVE, (task, dst))
+
+    # -- event handlers -----------------------------------------------------
+    def _on_arrival(self, task: Task, t: float) -> None:
+        self.metrics.observe_arrival()
+        self.tasks[task.tid] = task
+        self._place(task, t)
+
+    def _on_completion(self, task: Task, node: int, token: int,
+                       t: float) -> None:
+        if task.restarts != token or self._running[node] is not task:
+            return  # stale completion from before a failure
+        self._running[node] = None
+        task.t_finish = t
+        self.metrics.observe_completion(
+            response=t - task.t_arrive,
+            wait=(t - task.t_arrive) - task.work / self.grid.powers[node],
+            t_finish=t)
+        self._try_start(node, t)
+
+    def _on_migration_arrive(self, task: Task, dst: int, t: float) -> None:
+        self._in_flight.discard(task.tid)
+        if not self.grid.active[dst]:
+            self._place(task, t)  # destination died while in flight
+            return
+        task.node = dst
+        task.placements.append((t, dst))
+        self._queues[dst].append(task)
+        self._try_start(dst, t)
+
+    def _on_fail(self, node: int, t: float) -> None:
+        if not self.grid.active[node]:
+            return
+        self.metrics.failures += 1
+        self.grid = self.grid.fail(node)
+        for task in self._strand(node, t):
+            self._place(task, t)
+
+    def _on_join(self, node: int, t: float) -> None:
+        if self.grid.active[node] or node >= self._powers_full.size:
+            return
+        self.metrics.joins += 1
+        powers = self.grid.powers.copy()
+        active = self.grid.active.copy()
+        powers[node] = self._powers_full[node]
+        active[node] = True
+        self.grid = HyperGrid(self.grid.dims, powers, active)
+        # release work parked on still-inactive nodes (possible only after a
+        # total outage, when the placement fallback had nowhere active)
+        for nd in np.flatnonzero(~self.grid.active):
+            if self._queues[nd]:
+                parked, self._queues[nd] = self._queues[nd], []
+                for task in parked:
+                    task.node = -1
+                    self._place(task, t)
+        self._try_start(node, t)
+
+    def _on_trigger_eval(self, t: float) -> None:
+        queued = sum(len(q) for q in self._queues)
+        if queued and self.grid.total_power > 0:
+            loads = self.loads(t)
+            targets = loads.sum() * self.grid.gamma
+            excess = float(np.maximum(loads - targets, 0.0).sum())
+            mean_packets = np.mean(
+                [task.packets for q in self._queues for task in q])
+            works = [task.work for q in self._queues for task in q]
+            est = excess * mean_packets / max(np.mean(works), 1e-12)
+            dec = self.policy.wants_rebalance(self.view(t), queued, est)
+            if dec is not None:
+                self.metrics.trigger_evals += 1
+                if dec.trigger:
+                    self.metrics.trigger_fires += 1
+                    self._rebalance(t)
+        # re-arm only while there is work left to schedule
+        if self._outstanding() or self._eq.pending(
+                EventKind.ARRIVAL, EventKind.MIGRATION_ARRIVE,
+                EventKind.COMPLETION):
+            self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
+
+    # -- driver -------------------------------------------------------------
+    def run(self, workload: Workload, *, failures=(), joins=(),
+            horizon: float | None = None, max_events: int = 2_000_000
+            ) -> Metrics:
+        """Run to completion (or ``horizon``). ``failures``/``joins`` are
+        ``(time, node)`` sequences."""
+        for i in range(workload.m):
+            self._eq.push(workload.t_arrive[i], EventKind.ARRIVAL,
+                          Task(tid=i, t_arrive=float(workload.t_arrive[i]),
+                               work=float(workload.works[i]),
+                               packets=float(workload.packets[i])))
+        for t, node in failures:
+            self._eq.push(t, EventKind.NODE_FAIL, int(node))
+        for t, node in joins:
+            self._eq.push(t, EventKind.NODE_JOIN, int(node))
+        if self.policy.uses_trigger and self.trigger_period > 0:
+            self._eq.push(self.trigger_period, EventKind.TRIGGER_EVAL)
+
+        n_events = 0
+        while self._eq:
+            n_events += 1
+            if n_events > max_events:
+                raise RuntimeError(f"event budget exhausted ({max_events})")
+            ev = self._eq.pop()
+            if horizon is not None and ev.time > horizon:
+                break
+            self._now = ev.time
+            if ev.kind == EventKind.ARRIVAL:
+                self._on_arrival(ev.payload, ev.time)
+            elif ev.kind == EventKind.COMPLETION:
+                self._on_completion(*ev.payload, ev.time)
+            elif ev.kind == EventKind.MIGRATION_ARRIVE:
+                self._on_migration_arrive(*ev.payload, ev.time)
+            elif ev.kind == EventKind.NODE_FAIL:
+                self._on_fail(ev.payload, ev.time)
+            elif ev.kind == EventKind.NODE_JOIN:
+                self._on_join(ev.payload, ev.time)
+            elif ev.kind == EventKind.TRIGGER_EVAL:
+                self._on_trigger_eval(ev.time)
+        return self.metrics
+
+
+def run_policy(policy: str | Policy, workload: Workload, powers, *,
+               failures=(), joins=(), **runtime_kwargs) -> Metrics:
+    """Convenience: one policy, one workload, fresh runtime."""
+    rt = ClusterRuntime(powers, policy, **runtime_kwargs)
+    return rt.run(workload, failures=failures, joins=joins)

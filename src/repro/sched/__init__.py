@@ -2,7 +2,10 @@
 
   moe_dispatch  — token -> expert positional-scan dispatch (in-XLA)
   data_balance  — sequence -> data-shard balancing (host, per step)
-  request_sched — request -> replica continuous-batching scheduler
+  request_sched — request -> replica continuous-batching scheduler; its
+                  decision logic is also registered as the ``"replica"``
+                  policy of the event-driven cluster runtime
+                  (``repro.runtime``)
   straggler     — adaptive processing-power estimation (EWMA step times)
 """
 

@@ -16,12 +16,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core.hypergrid import HyperGrid
-from ..core.pslb import owner_of_fraction
 from ..core.psts import psts_schedule
-from ..core.scan import exclusive_scan_np
 from ..core.trigger import CrossoverTrigger
+from ..runtime.policies import PstsPolicy, positional_arrival, register
 
-__all__ = ["Request", "ReplicaScheduler"]
+__all__ = ["Request", "ReplicaScheduler", "RequestSchedulerPolicy"]
 
 
 @dataclass
@@ -86,19 +85,8 @@ class ReplicaScheduler:
         the request lands in the power interval with the most headroom —
         computed from the load and power scans, no global reshuffle."""
         req = Request(next(self._next_id), prompt_len, max_new_tokens)
-        loads = self.loads()
-        deficit = np.maximum(self.grid.powers / self.grid.total_power
-                             * (loads.sum() + req.work) - loads, 0.0)
-        if deficit.sum() <= 0:
-            # perfectly full: least normalised load among active replicas
-            with np.errstate(divide="ignore"):
-                ratio = np.where(self.grid.active,
-                                 loads / np.maximum(self.grid.powers, 1e-9),
-                                 np.inf)
-            req.replica = int(np.argmin(ratio))
-        else:
-            lam = exclusive_scan_np(deficit / deficit.sum())
-            req.replica = int(owner_of_fraction(lam, np.array([0.5]))[0])
+        req.replica = positional_arrival(self.loads(), self.grid.powers,
+                                         req.work)
         self._requests[req.rid] = req
         return req
 
@@ -135,6 +123,14 @@ class ReplicaScheduler:
                 r.replica = int(dst)
         return plan
 
+    def runtime_policy(self) -> "RequestSchedulerPolicy":
+        """This scheduler's placement rule + trigger constants as a
+        cluster-runtime policy, so serving traffic can be studied under the
+        same event engine (and the same Metrics) as every other policy."""
+        return RequestSchedulerPolicy(
+            p=self.p, q=self.q, t_task=self.t_task,
+            packets_per_step=self.packets_per_step, floor=self.trigger_floor)
+
     def fail_replica(self, idx: int) -> dict:
         """Elastic path: replica dies -> virtual node; its requests migrate
         by PSTS immediately (stranded work = infinite imbalance)."""
@@ -154,3 +150,23 @@ class ReplicaScheduler:
                 plan[r.rid] = (r.replica, int(dst))
                 r.replica = int(dst)
         return plan
+
+
+@register("replica")
+@dataclass
+class RequestSchedulerPolicy(PstsPolicy):
+    """The serving request scheduler as a cluster-runtime policy.
+
+    Identical decision logic to ``ReplicaScheduler`` — positional placement
+    on arrival, crossover-trigger-gated PSTS rebalancing — but driven by the
+    event engine, so it can be compared head-to-head with the baselines in
+    ``repro.runtime.policies`` on the same workloads and metrics. Defaults
+    are the serving-tier cost constants (seconds-scale steps, KV-sized
+    migration batches) rather than the generic cluster ones.
+    """
+
+    p: float = 1e-4
+    q: float = 1e-5
+    t_task: float = 1e-5
+    packets_per_step: float = 4096.0
+    floor: float = 0.1

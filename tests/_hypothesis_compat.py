@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim (ISSUE 1 satellite).
+
+Property-based tests use hypothesis when it is installed; without it the
+example-based tests in the same modules must still collect and run. Importing
+``given``/``settings``/``st`` from here gives the real objects when available
+and otherwise stand-ins that skip just the property tests.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy-building call chain (never executed)."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():  # zero-arg: strategy params must not look like fixtures
+                pytest.importorskip("hypothesis")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco

@@ -12,6 +12,9 @@ from repro.optim import AdamW, constant
 from repro.optim.compress import CompressionState
 from repro.train import init_state, make_train_step
 from repro.train.step import CompressedTrainState
+import pytest
+
+pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
 
 
 def test_compressed_step_tracks_uncompressed():

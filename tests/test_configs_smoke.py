@@ -10,6 +10,8 @@ import pytest
 from repro.configs import REGISTRY, SHAPES, arch_shape_cells, get_config
 from repro.models import LM
 
+pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
+
 ARCHS = sorted(REGISTRY)
 
 

@@ -5,8 +5,7 @@ weights) — the §Perf optimization changes traffic, never routing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sched.moe_dispatch import dispatch
 

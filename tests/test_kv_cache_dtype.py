@@ -9,6 +9,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import LM
+import pytest
+
+pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
 
 
 def test_qwen_config_uses_fp8_cache():

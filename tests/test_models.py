@@ -13,6 +13,8 @@ from repro.models import LM
 from repro.models.attention import chunked_attention, reference_attention
 from repro.models.ssm import selective_scan_chunked, selective_scan_ref
 
+pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
+
 FAMILIES = ["olmo-1b", "falcon-mamba-7b", "jamba-v0.1-52b", "gemma3-4b",
             "granite-moe-1b-a400m", "musicgen-large"]
 

@@ -1,0 +1,231 @@
+"""Event-driven cluster runtime: conservation, nonpreemption, trigger
+hysteresis, policy registry (ISSUE 1 tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    POLICIES,
+    ClusterRuntime,
+    Workload,
+    make_policy,
+    make_workload,
+    run_policy,
+)
+
+POWERS = np.array([3.0, 1.0, 7.0, 2.0, 5.0, 9.0, 4.0, 6.0])
+
+
+def _bursty(seed=0, horizon=80.0):
+    return make_workload("bursty", horizon=horizon, seed=seed,
+                         rate_lo=0.5, rate_hi=10.0, sojourn_lo=15.0,
+                         sojourn_hi=5.0, work_mean=5.0)
+
+
+# ---------------------------------------------------------------------------
+# Conservation: no task lost or duplicated across migrations and failures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_conservation_under_failures(policy):
+    wl = _bursty(seed=2)
+    rt = ClusterRuntime(POWERS, policy, seed=7, trigger_period=1.0,
+                        bandwidth=32.0)
+    m = rt.run(wl, failures=[(10.0, 1), (25.0, 5)], joins=[(40.0, 1)])
+    assert m.arrived == wl.m
+    assert m.completed == wl.m, "every task completes exactly once"
+    assert len(m.responses) == wl.m
+    # each runtime task object finished exactly once
+    assert sorted(rt.tasks) == list(range(wl.m))
+    assert all(t.t_finish is not None for t in rt.tasks.values())
+    assert all(r >= 0.0 for r in m.responses)
+    assert m.failures == 2 and m.joins == 1
+
+
+def test_migrated_tasks_counted_once():
+    wl = _bursty(seed=5)
+    rt = ClusterRuntime(POWERS, "psts", seed=0, trigger_period=1.0,
+                        policy_kwargs={"floor": 0.02, "p": 1e-4})
+    m = rt.run(wl)
+    assert m.migrations > 0, "regime should exercise migrations"
+    assert m.completed == wl.m
+    assert m.moved_packets == pytest.approx(
+        sum(rt.tasks[t.tid].packets * t.migrations
+            for t in rt.tasks.values()))
+
+
+# ---------------------------------------------------------------------------
+# Nonpreemption: a task that started service never moves
+# ---------------------------------------------------------------------------
+
+def test_nonpreemption_running_tasks_never_move():
+    wl = _bursty(seed=3)
+    rt = ClusterRuntime(POWERS, "psts", seed=1, trigger_period=0.5,
+                        policy_kwargs={"floor": 0.02, "p": 1e-4})
+    m = rt.run(wl, failures=[(15.0, 2)], joins=[(30.0, 2)])
+    assert m.migrations > 0
+    for task in rt.tasks.values():
+        if task.restarts:
+            continue  # failure restarts are the one sanctioned exception
+        # every placement decision happened before service began, and the
+        # task finished on the node it started on
+        assert all(t <= task.t_start + 1e-9 for t, _ in task.placements), \
+            f"task {task.tid} was moved after starting service"
+        assert task.node == task.placements[-1][1]
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_total_outage_then_rejoin(policy):
+    """Every node down at once: tasks queue (nowhere to run) and complete
+    after a rejoin — no crash, no loss, for every registered policy."""
+    wl = Workload(t_arrive=np.array([0.0, 1.0]),
+                  works=np.array([4.0, 4.0]), packets=np.ones(2))
+    m = run_policy(policy, wl, np.ones(2),
+                   failures=[(0.5, 0), (0.5, 1)], joins=[(3.0, 0)])
+    assert m.completed == 2
+    assert m.restarts >= 1
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_arrival_during_total_outage_released_by_other_node(policy):
+    """A task arriving while every node is down parks on an arbitrary slot;
+    it must be released when a DIFFERENT node rejoins."""
+    wl = Workload(t_arrive=np.array([5.0]), works=np.array([4.0]),
+                  packets=np.ones(1))
+    m = run_policy(policy, wl, np.ones(2),
+                   failures=[(1.0, 0), (1.0, 1)], joins=[(10.0, 1)])
+    assert m.completed == 1
+
+
+def test_failure_restart_is_flagged_not_preempted():
+    # one slow node with a long task, then kill that node mid-service
+    powers = np.array([1.0, 1.0])
+    wl = Workload(t_arrive=np.array([0.0, 0.0]),
+                  works=np.array([10.0, 10.0]),
+                  packets=np.array([1.0, 1.0]))
+    rt = ClusterRuntime(powers, "jsq", d=1)
+    m = rt.run(wl, failures=[(2.0, 1)])
+    assert m.completed == 2
+    assert m.restarts == 1
+    restarted = [t for t in rt.tasks.values() if t.restarts]
+    assert len(restarted) == 1
+    # the restarted task ran its full work on the surviving node
+    assert restarted[0].placements[-1][1] == 0
+
+
+# ---------------------------------------------------------------------------
+# Trigger hysteresis: the floor prevents thrashing on the residual
+# ---------------------------------------------------------------------------
+
+def test_trigger_floor_prevents_thrashing():
+    """With near-zero modelled overhead the crossover alone lets the trigger
+    fire on every residual wiggle; the hysteresis floor is what stops it.
+    Fires must be monotone in the floor and vanish above it."""
+    wl = _bursty(seed=9, horizon=120.0)
+    kw = {"p": 1e-6, "q": 1e-7, "t_task": 1e-7}  # overhead ~ 0
+    fires = {}
+    for floor in [0.0, 0.5, 1e9]:
+        rt = ClusterRuntime(POWERS, "psts", seed=2, trigger_period=0.5,
+                            policy_kwargs={**kw, "floor": floor})
+        m = rt.run(wl)
+        assert m.completed == wl.m
+        fires[floor] = m.trigger_fires
+    assert fires[0.0] > 0, "free trigger should thrash in this regime"
+    assert fires[1e9] == 0, "floor above any imbalance suppresses every fire"
+    assert fires[0.0] >= fires[0.5] >= fires[1e9]
+
+
+# ---------------------------------------------------------------------------
+# Policy registry and comparative behaviour
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    for name in ["random", "round_robin", "jsq", "arrival_only", "psts"]:
+        assert name in POLICIES
+        pol = make_policy(name)
+        assert pol.name == name
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_replica_policy_registered_via_sched():
+    pol = make_policy("replica")
+    assert pol.uses_trigger
+    assert pol.packets_per_step == 4096.0
+
+
+def test_load_aware_beats_random():
+    wl = _bursty(seed=11, horizon=120.0)
+    means = {}
+    for pol in ["random", "jsq", "psts"]:
+        means[pol] = run_policy(pol, wl, POWERS, seed=3).mean_response
+    assert means["jsq"] < means["random"]
+    assert means["psts"] < means["random"]
+
+
+def test_psts_beats_arrival_only_under_bursts():
+    """The acceptance-criterion shape at test scale: trigger-gated
+    rebalancing lowers mean response when bursts pile queues up."""
+    deltas = []
+    for seed in range(3):
+        wl = make_workload("bursty", horizon=200.0, seed=seed, rate_lo=0.5,
+                           rate_hi=18.0, sojourn_lo=25.0, sojourn_hi=6.0,
+                           work_mean=6.0)
+        powers = np.random.default_rng(0).integers(1, 10, 16).astype(float)
+        a = run_policy("arrival_only", wl, powers, seed=1).mean_response
+        p = run_policy("psts", wl, powers, seed=1, trigger_period=1.0,
+                       bandwidth=256.0,
+                       policy_kwargs={"floor": 0.05}).mean_response
+        deltas.append(a - p)
+    assert np.mean(deltas) > 0, deltas
+
+
+def test_trigger_not_armed_for_static_policies():
+    wl = _bursty(seed=4)
+    m = run_policy("jsq", wl, POWERS, trigger_period=1.0)
+    assert m.trigger_evals == 0 and m.trigger_fires == 0
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+def test_workload_processes_basic():
+    for proc in ["poisson", "bursty", "diurnal"]:
+        wl = make_workload(proc, horizon=50.0, seed=1)
+        assert (np.diff(wl.t_arrive) >= 0).all()
+        assert (wl.t_arrive < 50.0).all()
+        assert (wl.works > 0).all() and (wl.packets > 0).all()
+
+
+def test_trace_replay():
+    wl = make_workload("trace", horizon=10.0, seed=0,
+                       times=[5.0, 1.0, 3.0, 99.0])
+    assert wl.m == 3
+    assert list(wl.t_arrive) == [1.0, 3.0, 5.0]
+
+
+def test_bursty_is_burstier_than_poisson():
+    """MMPP-2 should have a higher coefficient of variation of interarrival
+    times than Poisson at a comparable mean rate."""
+    def cv2(t):
+        gaps = np.diff(t)
+        return gaps.var() / gaps.mean() ** 2
+
+    p = make_workload("poisson", horizon=2000.0, seed=0, rate=1.0)
+    b = make_workload("bursty", horizon=2000.0, seed=0,
+                      rate_lo=0.2, rate_hi=5.0)
+    assert cv2(b.t_arrive) > cv2(p.t_arrive) * 1.5
+
+
+def test_work_distributions_match_paper():
+    rng = np.random.default_rng(0)
+    from repro.runtime.workload import sample_works
+    u = sample_works(20_000, "uniform", 4.0, rng)
+    assert 1.0 <= u.min() and u.max() <= 7.0
+    assert np.mean(u) == pytest.approx(4.0, rel=0.05)
+    p = sample_works(20_000, "poisson", 4.0, rng)
+    assert p.min() >= 1.0
+    assert np.mean(p) == pytest.approx(4.0, rel=0.05)
+    with pytest.raises(ValueError):
+        sample_works(1, "exponential", 4.0, rng)

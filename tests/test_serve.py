@@ -14,6 +14,8 @@ from repro.models import LM
 from repro.sched.request_sched import ReplicaScheduler
 from repro.serve import Engine, GenRequest
 
+pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
+
 
 @pytest.fixture(scope="module")
 def toy():

@@ -13,6 +13,8 @@ import sys
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess model compiles; tier-1 fast subset skips
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -31,8 +33,9 @@ def test_sharded_train_step_matches_single_device():
     """The same smoke train step, sharded over a 4x2 mesh vs one device,
     produces the same loss (sharding must not change numerics)."""
     out = _run(r"""
+import contextlib
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.configs import REGISTRY
 from repro.models import LM
 from repro.models.common import logical_axis_rules
@@ -51,15 +54,21 @@ batch = {'tokens': tokens, 'labels': tokens}
 s1, m1 = jax.jit(step)(state, batch)
 
 # sharded
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(AxisType.Auto,) * 2)
+try:
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                         axis_types=(AxisType.Auto,) * 2)
+except ImportError:  # jax < 0.5
+    mesh = jax.make_mesh((4, 2), ('data', 'model'))
+set_mesh = getattr(jax, 'set_mesh', None)
+mesh_ctx = set_mesh(mesh) if set_mesh is not None else mesh
 from repro.launch.shardings import (activation_rules, batch_pspecs,
                                     state_pspecs, named)
 from repro.configs.base import SHAPES
 rules = activation_rules(cfg, mesh)
 state_shapes = jax.eval_shape(lambda: init_state(lm, opt, jax.random.key(0)))
 st_sh = named(mesh, state_pspecs(state_shapes, cfg, mesh))
-with jax.set_mesh(mesh), logical_axis_rules(rules):
+with mesh_ctx, logical_axis_rules(rules):
     s2, m2 = jax.jit(step, in_shardings=(st_sh, None),
                      out_shardings=(st_sh, None))(state, batch)
 d1 = float(m1['loss']); d2 = float(m2['loss'])
@@ -79,12 +88,10 @@ import os
 import jax, json
 # patch the production mesh to the small test mesh
 import repro.launch.mesh as mesh_mod
-from jax.sharding import AxisType
 def small_mesh(*, multi_pod=False, ep=None):
     shape = (2, 2, 2) if multi_pod else (4, 2)
     axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return mesh_mod._mk(shape, axes)
 mesh_mod.make_production_mesh = small_mesh
 import repro.launch.dryrun as dr
 dr.make_production_mesh = small_mesh
@@ -110,13 +117,11 @@ print('OK', json.dumps(r['dominant']))
 def test_multi_pod_smoke_cell():
     out = _run(r"""
 import jax, dataclasses
-from jax.sharding import AxisType
 import repro.launch.mesh as mesh_mod
 def small_mesh(*, multi_pod=False, ep=None):
     shape = (2, 2, 2) if multi_pod else (4, 2)
     axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return mesh_mod._mk(shape, axes)
 mesh_mod.make_production_mesh = small_mesh
 import repro.launch.dryrun as dr
 dr.make_production_mesh = small_mesh

@@ -16,6 +16,8 @@ from repro.optim import AdamW, warmup_cosine
 from repro.sched.straggler import StragglerMonitor
 from repro.train import LoopConfig, TrainState, init_state, make_train_step, train
 
+pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
+
 
 def _setup(name="olmo-1b", rows=2, seq=64, shards=(2,)):
     cfg = REGISTRY[name].smoke()
