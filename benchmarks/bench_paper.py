@@ -14,16 +14,15 @@ import time
 
 import numpy as np
 
+from repro import lab
 from repro.core import (
     SimConfig,
-    crossover_table,
     embed,
     optimal_dim,
     psts_schedule,
     simulate,
     sweep_nodes,
 )
-from repro.core.trigger import CrossoverTrigger
 
 NODES = (2, 4, 8, 16, 32, 64)
 
@@ -95,17 +94,41 @@ def fig6_speedup() -> list[tuple[str, float, str]]:
     return rows
 
 
+def _static_scenario(n: int, d: int, **policy_params) -> lab.Scenario:
+    """The paper's static section-5 setup as a declarative Scenario for the
+    legacy backend: sampled powers 1..10, m=4000 tasks, uniform work.
+
+    RNG-stream note: ClusterSpec samples powers from a fresh
+    ``default_rng(power_seed)`` per scenario (reproducible from the spec
+    alone), where the pre-lab code shared one rng across cluster sizes and
+    drew powers inside ``simulate`` ahead of the workload. Table 6/7 "ours"
+    values therefore shift slightly from pre-PR-2 emissions; the asserted
+    shapes (decreasing in n, dopt <= d1) are unchanged.
+    """
+    return lab.Scenario(
+        name=f"paper-static/n={n},d={d}",
+        cluster=lab.ClusterSpec(n_nodes=n, d=d, power_seed=0),
+        workload=lab.WorkloadSpec(process="poisson", work_dist="uniform",
+                                  work_mean=2.0, packet_mean=8.0,
+                                  m_tasks=4000),
+        policy=lab.PolicySpec("psts", params=policy_params),
+        seed=0)
+
+
 def table6_crossover() -> list[tuple[str, float, str]]:
-    """Table 6: crossover point at d=1 vs. the optimal dimension, plus a
-    least-squares calibration of the analytic model against the paper's own
-    numbers (their p, q are unreported)."""
+    """Table 6: crossover point at d=1 vs. the optimal dimension (one
+    Scenario per cell, executed on the legacy backend), plus a least-squares
+    calibration of the analytic model against the paper's own numbers
+    (their p, q are unreported)."""
     rows = []
-    for rec in crossover_table(SimConfig(seed=0), nodes=NODES):
-        n = rec["nodes"]
+    for n in NODES:
+        r1 = lab.run(_static_scenario(n, 1), backend="legacy")
+        ro = lab.run(_static_scenario(n, optimal_dim(n)), backend="legacy")
         us = _time_schedule_call(n, 1)
         rows.append((
             f"table6/crossover/n={n}", us,
-            f"ours_d1={rec['crossover_d1']:.4f};ours_dopt={rec['crossover_dopt']:.4f}"
+            f"ours_d1={r1.extras['crossover']:.4f}"
+            f";ours_dopt={ro.extras['crossover']:.4f}"
             f";paper_d1={PAPER_TABLE6_D1[n]};paper_dopt={PAPER_TABLE6_DOPT[n]}"))
     # calibration: crossover(n) ~ A*(n-1) + B/n + C against paper d=1 column
     ns = np.array(sorted(PAPER_TABLE6_D1), dtype=float)
@@ -121,18 +144,17 @@ def table6_crossover() -> list[tuple[str, float, str]]:
 
 def table7_arrival_crossover() -> list[tuple[str, float, str]]:
     """Table 7: crossover for one new arrival — small at every size, so
-    PSTS can run on every arrival (the paper's conclusion)."""
+    PSTS can run on every arrival (the paper's conclusion). Same Scenarios
+    as Table 6 with the paper's arrival bandwidth; the legacy backend
+    derives ``arrival_crossover`` alongside the full-rebalance crossover."""
     rows = []
-    rng = np.random.default_rng(0)
     for n in NODES:
-        powers = rng.integers(1, 10, size=n).astype(float)
-        grid = embed(powers, 1)
-        trig = CrossoverTrigger(grid, p=0.2, q=0.02, t_task=0.5,
-                                packets_per_step=40.0)
-        cross = trig.arrival_crossover(mean_work=2.0, m_tasks=4000)
+        r = lab.run(_static_scenario(n, 1, packets_per_step=40.0),
+                    backend="legacy")
         us = _time_schedule_call(n, 1, m=1)
         rows.append((f"table7/arrival_crossover/n={n}", us,
-                     f"ours={cross:.4f};paper={PAPER_TABLE7[n]}"))
+                     f"ours={r.extras['arrival_crossover']:.4f}"
+                     f";paper={PAPER_TABLE7[n]}"))
     return rows
 
 

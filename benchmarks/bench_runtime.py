@@ -1,12 +1,19 @@
-"""Event-driven cluster-runtime benchmarks (ISSUE 1 acceptance criteria).
+"""Event-driven cluster-runtime benchmarks, declared through ``repro.lab``.
 
-* ``policy_grid`` — policies x arrival processes x failure on/off under the
-  event engine, reporting mean/P99 response, migration volume and trigger
-  fires; asserts the headline shape: PSTS-with-trigger achieves lower mean
-  response time than place-on-arrival-only under bursty arrivals.
-* ``vector_sweep`` — >= 100 scenario seeds in ONE batched lax.scan call,
-  asserting per-seed agreement with the scalar reference engine to float
-  tolerance, and reporting the batched-vs-Python-loop speed.
+* ``policy_grid`` — policies x arrival processes x failure on/off as
+  Scenarios executed on the events backend, reporting mean/P99/wait
+  response, migration volume and trigger fires; asserts the headline shape:
+  PSTS-with-trigger achieves lower mean response time than
+  place-on-arrival-only under bursty arrivals.
+
+Timing note for trajectory diffs: since the repro.lab migration every
+``us_per_call`` here is END-TO-END (scenario lowering + workload
+materialization + engine + result assembly), where pre-lab emissions timed
+the bare engine call only — expect a one-off level shift, not a regression.
+* ``vector_sweep`` — a 128-seed sweep auto-dispatched by ``lab.sweep`` to
+  the batched backend (ONE lax.scan call), asserting per-seed agreement
+  with the scalar reference engine to float tolerance, and reporting the
+  batched-vs-Python-loop speed.
 """
 
 from __future__ import annotations
@@ -15,48 +22,54 @@ import time
 
 import numpy as np
 
-from repro.runtime import (
-    VectorConfig,
-    batch_slots,
-    make_workload,
-    run_policy,
-    simulate_batch,
-    simulate_scalar,
-)
+from repro import lab
 
 N_NODES = 16
-POWERS = np.random.default_rng(0).integers(1, 10, size=N_NODES).astype(float)
+POWERS = tuple(
+    np.random.default_rng(0).integers(1, 10, size=N_NODES).astype(float))
 
 # heavy-burst regime: offered load during bursts exceeds cluster power, so
 # queues build and rebalancing has something to do
 PROCESSES = {
-    "poisson": dict(rate=8.0, work_mean=6.0),
-    "bursty": dict(rate_lo=0.5, rate_hi=18.0, sojourn_lo=25.0,
-                   sojourn_hi=6.0, work_mean=6.0),
-    "diurnal": dict(rate_mean=8.0, amplitude=0.9, period=80.0,
-                    work_mean=6.0),
+    "poisson": {"rate": 8.0},
+    "bursty": {"rate_lo": 0.5, "rate_hi": 18.0, "sojourn_lo": 25.0,
+               "sojourn_hi": 6.0},
+    "diurnal": {"rate_mean": 8.0, "amplitude": 0.9, "period": 80.0},
 }
+WORK_MEAN = 6.0
 POLICIES = ("jsq", "arrival_only", "psts")
 HORIZON = 200.0
 SEEDS = (0, 1)
-FAILURES = [(40.0, 2), (90.0, 11)]
-JOINS = [(130.0, 2)]
+FAULTS = lab.FaultSpec(failures=((40.0, 2), (90.0, 11)),
+                       joins=((130.0, 2),))
+
+
+def _scenario(policy: str, process: str, fail: bool, seed: int
+              ) -> lab.Scenario:
+    if policy == "psts":
+        pol = lab.PolicySpec("psts", trigger_period=1.0,
+                             params={"floor": 0.05})
+        bandwidth = 256.0
+    else:
+        pol = lab.PolicySpec(policy)
+        bandwidth = 64.0
+    return lab.Scenario(
+        name=f"{process}{'+fail' if fail else ''}/{policy}",
+        cluster=lab.ClusterSpec(powers=POWERS, bandwidth=bandwidth),
+        workload=lab.WorkloadSpec(process=process, horizon=HORIZON,
+                                  work_mean=WORK_MEAN,
+                                  params=PROCESSES[process]),
+        policy=pol,
+        faults=FAULTS if fail else lab.FaultSpec(),
+        seed=seed, engine_seed=7)
 
 
 def _run(policy: str, process: str, fail: bool, seed: int):
-    wl = make_workload(process, horizon=HORIZON, seed=seed,
-                       **PROCESSES[process])
-    kwargs = {}
-    if policy == "psts":
-        kwargs = {"policy_kwargs": {"floor": 0.05}, "trigger_period": 1.0,
-                  "bandwidth": 256.0}
     t0 = time.perf_counter()
-    m = run_policy(policy, wl, POWERS, seed=7,
-                   failures=FAILURES if fail else (),
-                   joins=JOINS if fail else (), **kwargs)
+    r = lab.run(_scenario(policy, process, fail, seed), backend="events")
     us = (time.perf_counter() - t0) * 1e6
-    assert m.completed == m.arrived, (policy, process, fail, seed)
-    return m, us
+    assert r["completed"] == r["arrived"], (policy, process, fail, seed)
+    return r, us
 
 
 def policy_grid() -> list[tuple[str, float, str]]:
@@ -65,21 +78,23 @@ def policy_grid() -> list[tuple[str, float, str]]:
     for process in PROCESSES:
         for fail in (False, True):
             for policy in POLICIES:
-                ms, us = [], 0.0
+                rs, us = [], 0.0
                 for seed in SEEDS:
-                    m, dt = _run(policy, process, fail, seed)
-                    ms.append(m)
+                    r, dt = _run(policy, process, fail, seed)
+                    rs.append(r)
                     us += dt
-                mean = float(np.mean([m.mean_response for m in ms]))
-                p99 = float(np.mean([m.p99_response for m in ms]))
+                mean = float(np.mean([r["mean_response"] for r in rs]))
+                p99 = float(np.mean([r["p99_response"] for r in rs]))
+                wait = float(np.mean([r["mean_wait"] for r in rs]))
                 means[(process, fail, policy)] = mean
                 tag = f"{process}{'+fail' if fail else ''}"
                 rows.append((
                     f"runtime/{tag}/{policy}", us / len(SEEDS),
                     f"mean_resp={mean:.3f};p99_resp={p99:.3f};"
-                    f"migrations={sum(m.migrations for m in ms)};"
-                    f"fires={sum(m.trigger_fires for m in ms)};"
-                    f"restarts={sum(m.restarts for m in ms)}"))
+                    f"mean_wait={wait:.3f};"
+                    f"migrations={sum(r['migrations'] for r in rs)};"
+                    f"fires={sum(r['trigger_fires'] for r in rs)};"
+                    f"restarts={sum(r['restarts'] for r in rs)}"))
     # acceptance shape: the trigger pays under bursts, with and without
     # failures in play
     for fail in (False, True):
@@ -92,37 +107,50 @@ def policy_grid() -> list[tuple[str, float, str]]:
 
 
 def vector_sweep() -> list[tuple[str, float, str]]:
+    from repro.runtime.vector_backend import simulate_scalar
+
     n_seeds = 128
-    cfg = VectorConfig(n_nodes=N_NODES, n_slots=int(HORIZON), dt=1.0,
-                       rebalance=True, floor=0.1)
-    wls = [make_workload("poisson", horizon=HORIZON, seed=s,
-                         **PROCESSES["poisson"]) for s in range(n_seeds)]
-    slot, works, _ = batch_slots(wls, cfg.dt, cfg.n_slots)
+    base = lab.Scenario(
+        cluster=lab.ClusterSpec(powers=POWERS),
+        workload=lab.WorkloadSpec(process="poisson", horizon=HORIZON,
+                                  work_mean=WORK_MEAN,
+                                  params=PROCESSES["poisson"]),
+        policy=lab.PolicySpec("psts", params={"floor": 0.1}))
+    scenarios = lab.expand_grid(base, {"seed": range(n_seeds)})
 
-    simulate_batch(slot[:2], works[:2], POWERS, cfg)  # compile
+    lab.sweep(scenarios, backend="batched")  # compile at the timed shape
     t0 = time.perf_counter()
-    bm = simulate_batch(slot, works, POWERS, cfg)
-    us_batch = (time.perf_counter() - t0) * 1e6
+    results = lab.sweep(scenarios, backend="auto")
+    us_sweep = (time.perf_counter() - t0) * 1e6
+    assert all(r.backend == "batched" for r in results), \
+        "a uniform 128-seed sweep must auto-dispatch to the batched backend"
 
-    # scalar reference over a sample of seeds: agreement + loop cost
-    sample = range(0, n_seeds, 8)
+    # scalar reference over a sample of seeds: per-seed agreement with the
+    # batched results, and the cost of the equivalent Python loop. Both
+    # sides are timed end-to-end (scenario lowering + engine) so the
+    # per-seed comparison is like-for-like.
+    backend = lab.get_backend("batched")
+    sample = list(range(0, n_seeds, 8))
     max_err = 0.0
     t0 = time.perf_counter()
     for i in sample:
-        sm = simulate_scalar(slot[i], works[i], POWERS, cfg)
+        slot, works, powers, cfg, _ = backend.compile([scenarios[i]],
+                                                      backend.default_dt)
+        sm = simulate_scalar(slot[0], works[0], powers, cfg)
         for k, v in sm.items():
-            b = float(getattr(bm, k)[i])
+            b = float(results[i][k])
             err = abs(b - v) / max(abs(v), 1e-12)
             max_err = max(max_err, err)
             assert err < 1e-6, (i, k, b, v)
-    us_scalar = (time.perf_counter() - t0) / len(list(sample)) * 1e6
+    us_scalar = (time.perf_counter() - t0) / len(sample) * 1e6
 
+    mean_resp = float(np.mean([r["mean_response"] for r in results]))
     return [
-        (f"runtime/vector_sweep/seeds={n_seeds}", us_batch,
-         f"us_per_seed={us_batch / n_seeds:.1f};"
-         f"scalar_us_per_seed={us_scalar:.1f};"
+        (f"runtime/vector_sweep/seeds={n_seeds}", us_sweep,
+         f"sweep_e2e_us_per_seed={us_sweep / n_seeds:.1f};"
+         f"scalar_e2e_us_per_seed={us_scalar:.1f};"
          f"max_rel_err={max_err:.2e};"
-         f"mean_resp={float(bm.mean_response.mean()):.3f}"),
+         f"mean_resp={mean_resp:.3f}"),
     ]
 
 

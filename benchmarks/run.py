@@ -1,13 +1,17 @@
 """Benchmark driver. One function per paper table/figure, plus framework
-benchmarks (dispatch, kernels, data balance). Prints ``name,us_per_call,
-derived`` CSV.
+benchmarks (dispatch, kernels, data balance, runtime). Prints ``name,
+us_per_call,derived`` CSV; ``--json PATH`` additionally writes the same
+results machine-readable (derived ``k=v;k=v`` strings parsed into dicts) so
+perf trajectories can be tracked as ``BENCH_*.json`` artifacts.
 
-Run: ``PYTHONPATH=src python -m benchmarks.run [--only SUBSTR]``
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--json PATH]``
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 import traceback
 
@@ -43,12 +47,43 @@ def _suites():
     return suites
 
 
+def _finite(v):
+    """Strict-JSON guard: non-finite floats become None (bare ``NaN``
+    literals would make the artifact unparseable by jq/JSON.parse)."""
+    if isinstance(v, float) and not math.isfinite(v):
+        return None
+    return v
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` -> dict with numbers parsed where possible."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            if part:
+                out[part] = True
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = _finite(float(v))
+            except ValueError:
+                out[k] = v
+    return out
+
+
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--only", default="", help="substring filter on name")
+    parser.add_argument("--json", default="", metavar="PATH",
+                        help="also write results as a JSON list of "
+                             "{name, us_per_call, derived} records")
     args = parser.parse_args()
 
     print("name,us_per_call,derived")
+    records = []
     failures = 0
     for suite_name, fns in _suites():
         for fn in fns:
@@ -57,11 +92,24 @@ def main() -> None:
             try:
                 for name, us, derived in fn():
                     print(f"{name},{us:.1f},{derived}")
+                    records.append({
+                        "suite": suite_name,
+                        "name": name,
+                        "us_per_call": _finite(round(float(us), 1)),
+                        "derived": _parse_derived(derived),
+                    })
             except Exception:
                 failures += 1
                 print(f"{suite_name}/{fn.__name__},NaN,ERROR",
                       file=sys.stderr)
                 traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(records, fh, indent=2, sort_keys=True,
+                      allow_nan=False)
+            fh.write("\n")
+        print(f"# wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

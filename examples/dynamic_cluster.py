@@ -1,21 +1,18 @@
-"""Dynamic cluster walkthrough: the paper's algorithm operated over time.
+"""Dynamic cluster walkthrough: the paper's algorithm operated over time,
+declared through the ``repro.lab`` Scenario API.
 
 A 16-node heterogeneous cluster takes bursty traffic; a fast node dies
-mid-run and later rejoins. Placement policies compete under the identical
-event engine, then the vectorized backend sweeps one of the scenarios over
-64 seeds in a single batched call.
+mid-run and later rejoins. The whole experiment is ONE declarative Scenario;
+placement policies compete by swapping the ``policy`` section under the
+identical event engine, then ``lab.sweep`` runs the PSTS scenario over 64
+seeds, auto-dispatched to the vectorized backend in a single batched call.
 
 Run: PYTHONPATH=src python examples/dynamic_cluster.py
 """
 
 import numpy as np
 
-from repro.runtime import (
-    VectorConfig,
-    make_workload,
-    run_policy,
-    sweep_seeds,
-)
+from repro import lab
 
 
 def main():
@@ -24,40 +21,45 @@ def main():
     print(f"cluster: 16 nodes, powers {powers.astype(int).tolist()} "
           f"(total {powers.sum():.0f})")
 
-    wl = make_workload("bursty", horizon=200.0, seed=0, rate_lo=0.5,
-                       rate_hi=18.0, sojourn_lo=25.0, sojourn_hi=6.0,
-                       work_mean=6.0)
-    print(f"workload: {wl.m} tasks over {wl.horizon:.0f} time units, "
-          f"bursty (MMPP-2)\n")
-
     victim = int(np.argmax(powers))
-    failures = [(40.0, victim)]   # the strongest node dies during a burst
-    joins = [(120.0, victim)]     # ... and rejoins later
+    base = lab.Scenario(
+        name="bursty-failover",
+        cluster=lab.ClusterSpec(powers=tuple(powers), bandwidth=256.0),
+        workload=lab.WorkloadSpec(
+            process="bursty", horizon=200.0, work_mean=6.0,
+            params={"rate_lo": 0.5, "rate_hi": 18.0,
+                    "sojourn_lo": 25.0, "sojourn_hi": 6.0}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        faults=lab.FaultSpec(failures=((40.0, victim),),   # strongest node
+                             joins=((120.0, victim),)),    # dies, rejoins
+        seed=0, engine_seed=1)
+    wl = base.workload.materialize(base.seed)
+    print(f"workload: {wl.m} tasks over {wl.horizon:.0f} time units, "
+          f"bursty (MMPP-2); scenario {base.fingerprint()}\n")
 
     print(f"{'policy':<14} {'mean':>7} {'p99':>8} {'makespan':>9} "
           f"{'migr':>5} {'fires':>6} {'restarts':>8}")
     for policy in ["random", "round_robin", "jsq", "arrival_only", "psts"]:
-        kwargs = {}
-        if policy == "psts":
-            kwargs = {"trigger_period": 1.0, "bandwidth": 256.0,
-                      "policy_kwargs": {"floor": 0.05}}
-        m = run_policy(policy, wl, powers, seed=1, failures=failures,
-                       joins=joins, **kwargs)
-        assert m.completed == m.arrived  # conservation, even through failure
-        print(f"{policy:<14} {m.mean_response:>7.3f} {m.p99_response:>8.3f} "
-              f"{m.makespan:>9.1f} {m.migrations:>5d} "
-              f"{m.trigger_fires:>6d} {m.restarts:>8d}")
+        sc = (base if policy == "psts"
+              else base.replace(policy=lab.PolicySpec(policy)))
+        r = lab.run(sc, backend="events")
+        assert r["completed"] == r["arrived"]  # conservation through failure
+        print(f"{policy:<14} {r['mean_response']:>7.3f} "
+              f"{r['p99_response']:>8.3f} {r['makespan']:>9.1f} "
+              f"{r['migrations']:>5d} {r['trigger_fires']:>6d} "
+              f"{r['restarts']:>8d}")
 
     print("\nvectorized sweep: 64 bursty seeds, one batched lax.scan call")
-    cfg = VectorConfig(n_nodes=16, n_slots=200, dt=1.0, rebalance=True,
-                       floor=0.1)
-    bm = sweep_seeds("bursty", range(64), powers, cfg, rate_lo=0.5,
-                     rate_hi=18.0, sojourn_lo=25.0, sojourn_hi=6.0,
-                     work_mean=6.0)
-    print(f"mean response over seeds: {bm.mean_response.mean():.3f} "
-          f"+- {bm.mean_response.std():.3f}")
-    print(f"p99 response over seeds:  {bm.p99_response.mean():.3f}")
-    print(f"trigger fires per seed:   {bm.trigger_fires.mean():.1f}")
+    results = lab.sweep(base=base.replace(faults=lab.FaultSpec()),
+                        grid={"seed": range(64)})
+    assert all(r.backend == "batched" for r in results)  # auto-dispatched
+    mean = np.array([r["mean_response"] for r in results])
+    p99 = np.array([r["p99_response"] for r in results])
+    fires = np.array([r["trigger_fires"] for r in results])
+    print(f"mean response over seeds: {mean.mean():.3f} +- {mean.std():.3f}")
+    print(f"p99 response over seeds:  {p99.mean():.3f}")
+    print(f"trigger fires per seed:   {fires.mean():.1f}")
 
 
 if __name__ == "__main__":

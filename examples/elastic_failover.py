@@ -1,6 +1,9 @@
 """Elastic training: a host dies mid-run; the monitor declares it a virtual
 node (tau = 0), PSTS re-balances the input pipeline onto survivors, training
-resumes from the last checkpoint with an elastic mesh.
+resumes from the last checkpoint with an elastic mesh. The failover is also
+declared as a ``repro.lab`` Scenario so the cluster-level impact of the
+outage (and PSTS's rebalancing win) is quantified through the same event
+engine the benchmarks use.
 
 Run: PYTHONPATH=src python examples/elastic_failover.py
 """
@@ -9,6 +12,7 @@ import tempfile
 
 import numpy as np
 
+from repro import lab
 from repro.configs import get_config
 from repro.data import DocStream, Pipeline
 from repro.launch.mesh import elastic_shape
@@ -17,6 +21,34 @@ from repro.optim import AdamW, warmup_cosine
 from repro.sched.data_balance import balance_sequences
 from repro.sched.straggler import StragglerMonitor
 from repro.train import LoopConfig, train
+
+
+def failover_whatif(healthy_powers, dead_host: int) -> None:
+    """Declare the outage as a Scenario and ask the event engine what it
+    costs: same cluster + workload, with and without the failure, and with
+    and without PSTS rebalancing after the failure."""
+    base = lab.Scenario(
+        name="pipeline-failover",
+        cluster=lab.ClusterSpec(powers=tuple(healthy_powers),
+                                bandwidth=256.0),
+        workload=lab.WorkloadSpec(process="poisson", horizon=60.0,
+                                  work_mean=4.0, params={"rate": 0.7}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        seed=0)
+    fault = lab.FaultSpec(failures=((20.0, dead_host),))
+    rows = {
+        "healthy": base,
+        "fail, psts": base.replace(faults=fault),
+        "fail, no rebalance": base.replace(
+            faults=fault, policy=lab.PolicySpec("arrival_only")),
+    }
+    print("cluster-level what-if (event engine via repro.lab):")
+    for label, sc in rows.items():
+        r = lab.run(sc, backend="events")
+        print(f"  {label:<19} mean_resp={r['mean_response']:.3f} "
+              f"p99={r['p99_response']:.3f} restarts={r['restarts']} "
+              f"migrations={r['migrations']}")
 
 
 def main():
@@ -40,10 +72,16 @@ def main():
               f"loss {hist[-1]['loss']:.3f}")
 
         # host 3 stops heart-beating -> virtual node
+        tau_healthy = monitor.powers()  # pre-death estimates, all hosts live
         for _ in range(3):
             monitor.update({0: 1.0, 1: 1.0, 2: 1.1})
         tau = monitor.powers()
         print(f"host 3 died: powers -> {np.round(tau, 2).tolist()}")
+
+        # what does the outage cost the input pipeline, cluster-wide? The
+        # scenario cluster uses host 3's real pre-failure power estimate.
+        failover_whatif(np.where(tau_healthy > 0, tau_healthy, 1.0),
+                        dead_host=3)
 
         # PSTS drains the dead shard in the input pipeline
         lengths = np.array([len(stream.doc(i).tokens) for i in range(64)])

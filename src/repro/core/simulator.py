@@ -48,6 +48,8 @@ class SimConfig:
     packet_mean: float = 8.0        # packets per task (transfer size mu_i)
     power_low: int = 1              # paper: powers normalised 1..10
     power_high: int = 10
+    powers: tuple[float, ...] | None = None  # explicit node powers; None =
+                                    # sample power_low..power_high (paper)
     p: float = 0.2                  # time per communication step
     q: float = 0.02                 # time per scan-add computation step
     t_task: float = 0.5             # per-task local placement time
@@ -120,8 +122,14 @@ def _initial_placement(cfg: SimConfig, grid: HyperGrid,
 
 def simulate(cfg: SimConfig) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
-    powers = rng.integers(cfg.power_low, cfg.power_high + 1,
-                          size=cfg.n_nodes).astype(np.float64)
+    if cfg.powers is not None:
+        powers = np.asarray(cfg.powers, dtype=np.float64)
+        if powers.shape != (cfg.n_nodes,):
+            raise ValueError(f"powers has {powers.size} entries for "
+                             f"n_nodes={cfg.n_nodes}")
+    else:
+        powers = rng.integers(cfg.power_low, cfg.power_high + 1,
+                              size=cfg.n_nodes).astype(np.float64)
     grid = embed(powers, cfg.d)
     works, packets = _sample_workload(cfg, rng)
     node = _initial_placement(cfg, grid, rng)

@@ -1,0 +1,41 @@
+"""repro.lab — experiments as data over one of three backends.
+
+Declare an experiment once::
+
+    from repro import lab
+
+    sc = lab.Scenario(
+        cluster=lab.ClusterSpec(powers=(3, 1, 7, 2), bandwidth=256.0),
+        workload=lab.WorkloadSpec(process="bursty", horizon=200.0,
+                                  params={"rate_hi": 18.0}),
+        policy=lab.PolicySpec(name="psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        faults=lab.FaultSpec(failures=((40.0, 2),), joins=((120.0, 2),)),
+    )
+
+then execute it on any eligible backend — ``lab.run(sc)`` (scalar event
+engine), ``lab.run(sc, backend="batched")`` (one lax.scan on the
+accelerator), ``lab.run(sc, backend="legacy")`` (the paper's static
+section-5 simulator) — or sweep it: ``lab.sweep(base=sc, grid={"seed":
+range(128)})`` auto-dispatches uniform seed sweeps to the batched backend.
+Every backend returns the same canonical :class:`RunResult`. Scenario files
+round-trip through JSON and the ``python -m repro.lab`` CLI.
+"""
+
+from .api import BATCH_THRESHOLD, expand_grid, run, sweep
+from .backends import (
+    BACKENDS,
+    BATCHED_POLICIES,
+    Backend,
+    BackendError,
+    get_backend,
+)
+from .result import METRIC_SCHEMA, RunResult, make_metrics
+from .specs import ClusterSpec, FaultSpec, PolicySpec, Scenario, WorkloadSpec
+
+__all__ = [
+    "BATCH_THRESHOLD", "expand_grid", "run", "sweep",
+    "BACKENDS", "BATCHED_POLICIES", "Backend", "BackendError", "get_backend",
+    "METRIC_SCHEMA", "RunResult", "make_metrics",
+    "ClusterSpec", "FaultSpec", "PolicySpec", "Scenario", "WorkloadSpec",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.lab`` — see :mod:`repro.lab.cli`."""
+
+import sys
+
+from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,440 @@
+"""Backend protocol + the three registered execution surfaces.
+
+* ``"events"``  — the scalar discrete-event engine (``runtime.ClusterRuntime``):
+  full fidelity, per-task state, any registered policy, faults, migration
+  bandwidth. The reference semantics.
+* ``"batched"`` — the vectorized fluid backend (``runtime.vector_backend``):
+  B scenarios as one ``lax.scan`` on the accelerator. Positional policies
+  only (``arrival_only``/``psts``) — it carries no per-task migration
+  histories — and faults become a power up/down schedule.
+* ``"legacy"``  — the static paper simulator (``core.simulator``): one
+  snapshot, one full PSTS pass, the section-5 cost model. No faults, no
+  arrival staggering; it alone derives crossover points (Tables 6-7).
+
+Every backend consumes the same :class:`~repro.lab.specs.Scenario` and
+returns the same-schema :class:`~repro.lab.result.RunResult`;
+``eligible(scenario)`` returns a human-readable reason when a scenario
+cannot run on a backend (``None`` = eligible). jax-dependent imports stay
+inside the batched backend so the events/legacy paths never touch kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+
+from ..core.hypergrid import embed, optimal_dim
+from ..core.simulator import SimConfig, simulate
+from ..core.trigger import CrossoverTrigger
+from ..runtime.policies import PstsPolicy
+from .result import RunResult, make_metrics
+from .specs import Scenario
+
+__all__ = [
+    "Backend",
+    "BackendError",
+    "BACKENDS",
+    "register_backend",
+    "get_backend",
+    "EventsBackend",
+    "BatchedBackend",
+    "LegacyBackend",
+    "BATCHED_POLICIES",
+]
+
+# policies expressible without per-task state (the batched backend's limit)
+BATCHED_POLICIES = ("arrival_only", "psts")
+
+# cost-model constants a PolicySpec may override — derived from PstsPolicy's
+# own fields so the batched/legacy param validation stays in lockstep with
+# what the events backend's constructor accepts
+_COST_KEYS = tuple(f.name for f in dataclasses.fields(PstsPolicy))
+
+
+class BackendError(ValueError):
+    """Scenario not eligible on the requested backend."""
+
+
+class Backend:
+    """One execution surface. Subclasses register under ``BACKENDS``."""
+
+    name: str = "?"
+
+    def eligible(self, scenario: Scenario) -> str | None:
+        """Reason this scenario cannot run here, or ``None`` if it can."""
+        return None
+
+    def check(self, scenario: Scenario) -> None:
+        reason = self.eligible(scenario)
+        if reason is not None:
+            raise BackendError(f"backend {self.name!r}: {reason}")
+
+    def run(self, scenario: Scenario, **options) -> RunResult:
+        raise NotImplementedError
+
+
+BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(cls: type[Backend]) -> type[Backend]:
+    BACKENDS[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> Backend:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; have {sorted(BACKENDS)}")
+    return BACKENDS[name]
+
+
+# fields allowed to differ between scenarios sharing one batched compile
+# (the workload-realization axes)
+SEED_FIELDS = ("seed", "name")
+
+
+def uniform_but_for_seed(scenarios: list[Scenario]) -> bool:
+    """True when the scenarios differ only in workload seed/name — the
+    shape the batched backend can run as one compiled batch."""
+    def key(sc):
+        d = sc.to_dict()
+        for f in SEED_FIELDS:
+            d.pop(f, None)
+        return json.dumps(d, sort_keys=True)
+    first = key(scenarios[0])
+    return all(key(sc) == first for sc in scenarios[1:])
+
+
+def _unknown_policy_params(scenario: Scenario) -> str | None:
+    """Mirror the events backend's constructor check: a param the policy
+    cannot take must be an eligibility error everywhere, never silently
+    dropped — otherwise auto-dispatch would make the same typo'd sweep fail
+    or run depending on its size. Only psts carries cost constants."""
+    allowed = set(_COST_KEYS) if scenario.policy.name == "psts" else set()
+    unknown = set(scenario.policy.params) - allowed
+    if unknown:
+        return (f"policy {scenario.policy.name!r} params not expressible "
+                f"here: {sorted(unknown)} (accepted: {sorted(allowed)})")
+    return None
+
+
+def _fault_nodes_in_range(scenario: Scenario) -> str | None:
+    n = scenario.cluster.size
+    for t, node in scenario.faults.failures + scenario.faults.joins:
+        if not 0 <= node < n:
+            return f"fault event at t={t} names node {node} outside 0..{n - 1}"
+    return None
+
+
+def _trace_problem(scenario: Scenario) -> str | None:
+    """A missing/unparseable trace file must be an eligibility reason, not
+    a mid-run traceback after the 'backends' report said eligible."""
+    path = scenario.workload.trace_path
+    if path is None:
+        return None
+    try:
+        from ..runtime.workload import load_trace_csv
+        load_trace_csv(path)
+    except Exception as exc:  # noqa: BLE001 — surface any load failure
+        return f"trace {path!r} unreadable: {exc}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# events — scalar discrete-event engine
+# ---------------------------------------------------------------------------
+
+@register_backend
+class EventsBackend(Backend):
+    name = "events"
+
+    def eligible(self, scenario):
+        from ..runtime.policies import make_policy
+        try:  # unknown names AND param/constructor mismatches, one reason
+            make_policy(scenario.policy.name, **dict(scenario.policy.params))
+        except (TypeError, ValueError) as exc:
+            return str(exc)
+        return _fault_nodes_in_range(scenario) or _trace_problem(scenario)
+
+    def run(self, scenario, **options):
+        from ..runtime.runtime import ClusterRuntime
+        self.check(scenario)
+        if options:
+            raise TypeError(f"events backend takes no options: "
+                            f"{sorted(options)}")
+        wl = scenario.workload.materialize(scenario.seed)
+        rt = ClusterRuntime(
+            scenario.cluster.resolve_powers(), scenario.policy.name,
+            d=scenario.cluster.d,
+            trigger_period=scenario.policy.trigger_period,
+            bandwidth=scenario.cluster.bandwidth,
+            seed=scenario.engine_seed,
+            policy_kwargs=dict(scenario.policy.params))
+        m = rt.run(wl, failures=scenario.faults.failures,
+                   joins=scenario.faults.joins)
+        options = {"model": "discrete-event"}
+        if scenario.workload.m_tasks is not None:
+            # the realized arrival process decides the count here
+            options["ignored"] = ["workload.m_tasks"]
+        return RunResult(
+            fingerprint=scenario.fingerprint(), backend=self.name,
+            backend_options=options,
+            metrics=make_metrics(**m.summary()),
+            scenario_name=scenario.name)
+
+
+# ---------------------------------------------------------------------------
+# batched — vectorized fluid backend (one lax.scan over B scenarios)
+# ---------------------------------------------------------------------------
+
+@register_backend
+class BatchedBackend(Backend):
+    name = "batched"
+    default_dt = 1.0
+
+    def eligible(self, scenario):
+        if scenario.policy.name not in BATCHED_POLICIES:
+            return (f"policy {scenario.policy.name!r} needs per-task state; "
+                    f"the batched backend supports positional policies only "
+                    f"({', '.join(BATCHED_POLICIES)})")
+        bad = _unknown_policy_params(scenario)
+        if bad is not None:
+            return bad
+        bad = _fault_nodes_in_range(scenario) or _trace_problem(scenario)
+        if bad is not None:
+            return bad
+        failed_at: dict[int, float] = {}
+        for t, node in sorted(scenario.faults.failures):
+            failed_at.setdefault(node, t)
+        for t, node in scenario.faults.joins:
+            if node not in failed_at or failed_at[node] >= t:
+                return (f"join of node {node} at t={t} has no earlier "
+                        f"failure; the batched backend models faults as a "
+                        f"power up/down schedule")
+        # the fluid model cannot park work during a total outage (the
+        # events backend can); reject schedules that zero the capacity
+        n = scenario.cluster.size
+        down: set[int] = set()
+        for t, node, up in sorted(
+                [(t, nd, False) for t, nd in scenario.faults.failures]
+                + [(t, nd, True) for t, nd in scenario.faults.joins]):
+            down.discard(node) if up else down.add(node)
+            if len(down) == n:
+                return (f"all {n} nodes down at t={t}; the fluid model "
+                        f"cannot hold work through a total outage — use "
+                        f"the events backend")
+        return None
+
+    # -- scenario -> tensors -----------------------------------------------
+    def compile(self, scenarios: list[Scenario], dt: float):
+        """Shared lowering for run/run_many: (slot, works, powers, cfg,
+        power_scale). All scenarios must share cluster/policy/faults/
+        workload shape (only seeds may differ)."""
+        from ..runtime.vector_backend import VectorConfig
+        from ..runtime.workload import batch_slots
+        if not uniform_but_for_seed(scenarios):
+            raise BackendError(
+                "batched batch: scenarios must be identical except for "
+                "seed/name (one cluster, policy, fault schedule and "
+                "workload shape per compile)")
+        base = scenarios[0]
+        powers = base.cluster.resolve_powers()
+        n = int(powers.size)
+        wls = [sc.workload.materialize(sc.seed) for sc in scenarios]
+        horizon = base.workload.horizon
+        if horizon is None:  # whole-trace replay: cover the last arrival
+            horizon = max((wl.horizon for wl in wls), default=0.0) + dt
+        # ceil, not round: a final partial slot must still admit arrivals
+        # in [floor(horizon/dt)*dt, horizon) or the backends diverge
+        n_slots = max(int(math.ceil(horizon / dt - 1e-9)), 1)
+        pol = base.policy
+        # unset cost constants fall back to the PSTS policy's own defaults
+        # (not VectorConfig's) so the same Scenario runs the same trigger
+        # hysteresis on the events and batched backends
+        defaults = PstsPolicy()
+        cost = {k: float(pol.params.get(k, getattr(defaults, k)))
+                for k in _COST_KEYS}
+        if base.workload.trace_path is not None:
+            # a trace carries its own packet/work ratio; the spec's
+            # sampling means are never read for traces
+            tot_w = sum(float(wl.works.sum()) for wl in wls)
+            packets_per_unit = (sum(float(wl.packets.sum()) for wl in wls)
+                                / max(tot_w, 1e-12))
+        else:
+            # sample_packets draws 1 + Poisson(packet_mean), so the
+            # realized mean is packet_mean + 1
+            packets_per_unit = ((1.0 + base.workload.packet_mean)
+                                / base.workload.work_mean)
+        cfg = VectorConfig(
+            n_nodes=n, n_slots=n_slots, dt=float(dt),
+            rebalance=(pol.name == "psts"),
+            packets_per_unit=packets_per_unit,
+            **cost)
+        slot, works, _ = batch_slots(wls, dt, n_slots)
+        scale = self._power_scale(base, n_slots, n, dt)
+        return slot, works, powers, cfg, scale
+
+    @staticmethod
+    def _power_scale(scenario, n_slots, n, dt):
+        if scenario.faults.empty:
+            return None
+        scale = np.ones((n_slots, n))
+        events = sorted(
+            [(t, node, 0.0) for t, node in scenario.faults.failures]
+            + [(t, node, 1.0) for t, node in scenario.faults.joins])
+        for t, node, value in events:
+            # epsilon-guarded floor: 40.0 // 0.1 is 399 in floats, but the
+            # event belongs to the slot containing t (slot 400)
+            s = min(max(int(math.floor(t / dt + 1e-9)), 0), n_slots)
+            scale[s:, node] = value
+        return scale
+
+    def _result(self, scenario, bm, i, cfg):
+        count = int(bm.completed[i])
+        moved_units = float(bm.moved_units[i])
+        metrics = make_metrics(
+            arrived=count, completed=count,
+            makespan=float(bm.makespan[i]),
+            mean_response=float(bm.mean_response[i]),
+            p99_response=float(bm.p99_response[i]),
+            moved_units=moved_units,
+            moved_packets=moved_units * cfg.packets_per_unit,
+            trigger_evals=cfg.n_slots if cfg.rebalance else 0,
+            trigger_fires=int(bm.trigger_fires[i]),
+            restarts=0,
+            failures=len(scenario.faults.failures),
+            joins=len(scenario.faults.joins))
+        return RunResult(
+            fingerprint=scenario.fingerprint(), backend=self.name,
+            backend_options={
+                "model": "fluid", "dt": cfg.dt, "n_slots": cfg.n_slots,
+                # spec fields the fluid model has no analogue for: the
+                # trigger is evaluated every slot, migration is an instant
+                # redistribution (cost via packets_per_step), the
+                # positional rule runs flat (no hypergrid recursion), and
+                # nothing is engine-random
+                "ignored": ["policy.trigger_period", "cluster.bandwidth",
+                            "cluster.d", "engine_seed"]
+                + (["workload.m_tasks"]
+                   if scenario.workload.m_tasks is not None else []),
+            },
+            metrics=metrics, scenario_name=scenario.name)
+
+    def run(self, scenario, *, dt: float | None = None, **options):
+        if options:
+            raise TypeError(f"batched backend options: dt only; got "
+                            f"{sorted(options)}")
+        return self.run_many([scenario], dt=dt)[0]
+
+    def run_many(self, scenarios: list[Scenario],
+                 *, dt: float | None = None) -> list[RunResult]:
+        """The whole sweep as ONE ``simulate_batch`` call."""
+        from ..runtime.vector_backend import simulate_batch
+        if not scenarios:
+            return []
+        # one representative check suffices: compile enforces that the
+        # rest differ only in seed/name, which eligibility never reads
+        self.check(scenarios[0])
+        dt = self.default_dt if dt is None else float(dt)
+        if dt <= 0:
+            raise BackendError(f"batched backend: dt must be > 0, got {dt}")
+        slot, works, powers, cfg, scale = self.compile(scenarios, dt)
+        bm = simulate_batch(slot, works, powers, cfg, power_scale=scale)
+        return [self._result(sc, bm, i, cfg)
+                for i, sc in enumerate(scenarios)]
+
+
+# ---------------------------------------------------------------------------
+# legacy — static paper simulator (core.simulator, section 5)
+# ---------------------------------------------------------------------------
+
+@register_backend
+class LegacyBackend(Backend):
+    name = "legacy"
+
+    def eligible(self, scenario):
+        if not scenario.faults.empty:
+            return ("the static paper simulator has no timeline; declare "
+                    "faults on the events or batched backend")
+        if scenario.policy.name != "psts":
+            return (f"models exactly one full PSTS pass; policy "
+                    f"{scenario.policy.name!r} is not expressible")
+        if scenario.workload.trace_path is not None:
+            return ("samples its own workload realization; trace replay "
+                    "needs the events or batched backend")
+        return _unknown_policy_params(scenario)
+
+    def run(self, scenario, **options):
+        self.check(scenario)
+        if options:
+            raise TypeError(f"legacy backend takes no options: "
+                            f"{sorted(options)}")
+        from ..runtime.workload import ARRIVAL_PROCESSES
+        cluster, wl_spec, pol = (scenario.cluster, scenario.workload,
+                                 scenario.policy)
+        powers = cluster.resolve_powers()
+        n = int(powers.size)
+        d = optimal_dim(n) if cluster.d is None else cluster.d
+        if wl_spec.m_tasks is not None:
+            m = wl_spec.m_tasks
+        else:  # arrival count only — simulate() samples its own works
+            rng = np.random.default_rng(scenario.seed)
+            m = int(ARRIVAL_PROCESSES[wl_spec.process](
+                wl_spec.horizon, rng, **wl_spec.params).shape[0])
+        base = SimConfig()
+        cost = {k: float(pol.params.get(k, getattr(base, k)))
+                for k in _COST_KEYS if k != "floor"}
+        cfg = SimConfig(
+            n_nodes=n, d=d, m_tasks=m, work_dist=wl_spec.work_dist,
+            work_mean=wl_spec.work_mean, packet_mean=wl_spec.packet_mean,
+            powers=tuple(float(p) for p in powers), seed=scenario.seed,
+            **cost)
+        r = simulate(cfg)
+        metrics = make_metrics(
+            arrived=m, completed=m,
+            makespan=r.makespan_after + r.overhead,
+            migrations=r.moved_tasks,
+            moved_packets=r.moved_packets,
+            moved_units=r.moved_units,
+            trigger_evals=1,
+            trigger_fires=int(r.moved_tasks > 0),
+            restarts=0, failures=0, joins=0)
+        trig = CrossoverTrigger(
+            embed(powers, d), p=cfg.p, q=cfg.q, t_task=cfg.t_task,
+            packets_per_step=cfg.packets_per_step)
+        extras = {
+            "crossover": r.crossover,
+            "arrival_crossover": trig.arrival_crossover(
+                mean_work=cfg.work_mean, m_tasks=m,
+                packets_per_task=cfg.packet_mean),
+            "speedup": r.speedup,
+            "overhead": r.overhead,
+            "overhead_apriori": r.overhead_apriori,
+            "makespan_before": r.makespan_before,
+            "makespan_after": r.makespan_after,
+            "imbalance_before": r.imbalance_before,
+            "imbalance_after": r.imbalance_after,
+            "residual": r.residual,
+            "dims": list(r.dims),
+        }
+        return RunResult(
+            fingerprint=scenario.fingerprint(), backend=self.name,
+            backend_options={
+                "model": "static-snapshot", "d": d,
+                # unset cost constants keep SimConfig's paper-calibrated
+                # absolute regime (p=0.2, ...), deliberately NOT the
+                # PstsPolicy relative regime events/batched share — this
+                # backend exists to reproduce the paper's Tables 6-7
+                "cost_defaults": "SimConfig (paper-calibrated)",
+                # the snapshot has no timeline: arrivals land at once and
+                # the one PSTS pass runs unconditionally (no trigger, so
+                # a hysteresis floor has nothing to gate)
+                "ignored": ["workload arrival times",
+                            "policy.trigger_period", "cluster.bandwidth",
+                            "engine_seed"]
+                + (["policy.params.floor"] if "floor" in pol.params
+                   else []),
+            },
+            metrics=metrics, extras=extras, scenario_name=scenario.name)

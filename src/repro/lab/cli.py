@@ -1,0 +1,206 @@
+"""Command-line front end: scenarios as JSON files.
+
+::
+
+    python -m repro.lab template [--preset bursty-failover] > scenario.json
+    python -m repro.lab run scenario.json --backend events --out result.json
+    python -m repro.lab sweep scenario.json --grid seed=0:64 --backend auto
+    python -m repro.lab backends scenario.json      # eligibility report
+
+Grid axes are ``path=values`` with dotted scenario paths: ``seed=0:64``
+(range), ``seed=0:64:4`` (strided), ``policy.name=jsq,psts`` (list),
+``policy.params.floor=0.05,0.1`` (floats). Repeat ``--grid`` for a product.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .api import BATCH_THRESHOLD, expand_grid, run, sweep
+from .backends import BACKENDS
+from .specs import (
+    ClusterSpec,
+    FaultSpec,
+    PolicySpec,
+    Scenario,
+    WorkloadSpec,
+)
+
+__all__ = ["main", "PRESETS"]
+
+
+def _preset_basic() -> Scenario:
+    return Scenario(
+        name="basic-psts",
+        cluster=ClusterSpec(n_nodes=16, d=None, bandwidth=256.0),
+        workload=WorkloadSpec(process="poisson", horizon=200.0,
+                              work_mean=6.0, params={"rate": 8.0}),
+        policy=PolicySpec(name="psts", trigger_period=1.0,
+                          params={"floor": 0.05}),
+    )
+
+
+def _preset_bursty_failover() -> Scenario:
+    return Scenario(
+        name="bursty-failover",
+        cluster=ClusterSpec(n_nodes=16, d=None, bandwidth=256.0),
+        workload=WorkloadSpec(
+            process="bursty", horizon=200.0, work_mean=6.0,
+            params={"rate_lo": 0.5, "rate_hi": 18.0,
+                    "sojourn_lo": 25.0, "sojourn_hi": 6.0}),
+        policy=PolicySpec(name="psts", trigger_period=1.0,
+                          params={"floor": 0.05}),
+        faults=FaultSpec(failures=((40.0, 2),), joins=((120.0, 2),)),
+    )
+
+
+def _preset_paper_static() -> Scenario:
+    return Scenario(
+        name="paper-static",
+        cluster=ClusterSpec(n_nodes=16, d=1),
+        workload=WorkloadSpec(process="poisson", horizon=100.0,
+                              work_dist="uniform", work_mean=2.0,
+                              m_tasks=4000),
+        policy=PolicySpec(name="psts"),
+    )
+
+
+PRESETS = {
+    "basic": _preset_basic,
+    "bursty-failover": _preset_bursty_failover,
+    "paper-static": _preset_paper_static,
+}
+
+
+def _parse_value(tok: str):
+    for conv in (int, float):
+        try:
+            return conv(tok)
+        except ValueError:
+            pass
+    return tok
+
+
+def _parse_grid(specs: list[str]) -> dict:
+    grid: dict = {}
+    for item in specs:
+        if "=" not in item:
+            raise SystemExit(f"--grid {item!r}: expected path=values")
+        path, values = item.split("=", 1)
+        if ":" in values:
+            parts = values.split(":")
+            if len(parts) not in (2, 3) or not all(
+                    p.lstrip("-").isdigit() for p in parts):
+                raise SystemExit(
+                    f"--grid {item!r}: ranges are integer start:stop[:step]"
+                    f"; use a comma list for floats (e.g. "
+                    f"{path}=0.05,0.1)")
+            grid[path] = list(range(*map(int, parts)))
+        else:
+            grid[path] = [_parse_value(v) for v in values.split(",")]
+    return grid
+
+
+def _load_scenario(path: str) -> Scenario:
+    return Scenario.from_json(Path(path).read_text())
+
+
+def _emit(results, out: str | None) -> None:
+    payload = [r.to_dict() for r in results]  # to_dict is NaN-safe
+    text = json.dumps(payload, indent=2, sort_keys=True, allow_nan=False)
+    if out:
+        Path(out).write_text(text + "\n")
+        _table(results)
+        print(f"wrote {len(results)} result(s) to {out}")
+    else:
+        print(text)
+
+
+def _table(results) -> None:
+    cols = ("mean_response", "p99_response", "makespan", "trigger_fires")
+    print(f"{'backend':<9} {'fingerprint':<17} "
+          + " ".join(f"{c:>14}" for c in cols))
+    for r in results:
+        cells = []
+        for c in cols:
+            v = r.metrics[c]
+            cells.append(f"{'-':>14}" if v is None else f"{v:>14.3f}")
+        print(f"{r.backend:<9} {r.fingerprint:<17} " + " ".join(cells))
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lab",
+        description="declarative scheduling experiments over one of three "
+                    "backends")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_tpl = sub.add_parser("template", help="print a scenario JSON to edit")
+    p_tpl.add_argument("--preset", choices=sorted(PRESETS), default="basic")
+
+    p_run = sub.add_parser("run", help="run one scenario file")
+    p_run.add_argument("scenario")
+    p_run.add_argument("--backend", default="events",
+                       choices=sorted(BACKENDS))
+    p_run.add_argument("--dt", type=float, default=None,
+                       help="slot width (batched backend only)")
+    p_run.add_argument("--out", default=None, help="write result JSON here")
+
+    p_sweep = sub.add_parser("sweep", help="run a grid over a base scenario")
+    p_sweep.add_argument("scenario")
+    p_sweep.add_argument("--grid", action="append", default=[],
+                         metavar="PATH=VALUES")
+    p_sweep.add_argument("--backend", default="auto",
+                         choices=["auto", *sorted(BACKENDS)])
+    p_sweep.add_argument("--batch-threshold", type=int,
+                         default=BATCH_THRESHOLD)
+    p_sweep.add_argument("--dt", type=float, default=None)
+    p_sweep.add_argument("--out", default=None)
+
+    p_back = sub.add_parser("backends",
+                            help="eligibility report for a scenario file")
+    p_back.add_argument("scenario")
+
+    args = parser.parse_args(argv)
+
+    if args.cmd == "template":
+        print(PRESETS[args.preset]().to_json())
+        return 0
+
+    scenario = _load_scenario(args.scenario)
+
+    if args.cmd == "backends":
+        for name in sorted(BACKENDS):
+            reason = BACKENDS[name].eligible(scenario)
+            status = "eligible" if reason is None else f"NOT eligible: {reason}"
+            print(f"{name:<9} {status}")
+        return 0
+
+    if args.cmd == "run":
+        if args.dt is not None and args.backend != "batched":
+            raise SystemExit(f"--dt sets the batched backend's slot width; "
+                             f"it does nothing on {args.backend!r}")
+        opts = {"dt": args.dt} if args.dt is not None else {}
+        _emit([run(scenario, backend=args.backend, **opts)], args.out)
+        return 0
+
+    # sweep
+    grid = _parse_grid(args.grid)
+    scenarios = expand_grid(scenario, grid)
+    opts = {}
+    if args.dt is not None:
+        if args.backend not in ("auto", "batched"):
+            raise SystemExit(f"--dt sets the batched backend's slot width; "
+                             f"it does nothing on {args.backend!r}")
+        opts["dt"] = args.dt
+    results = sweep(scenarios, backend=args.backend,
+                    batch_threshold=args.batch_threshold, **opts)
+    _emit(results, args.out)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

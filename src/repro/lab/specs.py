@@ -1,0 +1,307 @@
+"""Declarative experiment specs: experiments are data, not code.
+
+A :class:`Scenario` is a frozen, JSON-round-trippable description of one
+simulation — cluster, workload, policy, fault schedule, seeds — independent
+of *how* it is executed. The three execution surfaces (scalar event engine,
+batched lax.scan backend, static paper simulator) become interchangeable
+:mod:`repro.lab.backends` implementations over the same Scenario, echoing the
+scenario x algorithm x metric matrix framing of the scheduler-evaluation
+literature (Casanova et al. 2011; Dutot et al.).
+
+Round-trip contract: ``Scenario.from_json(s.to_json())`` reproduces an equal
+scenario with an identical :meth:`Scenario.fingerprint` — the fingerprint is
+the stable identity that ties a :class:`repro.lab.RunResult` back to the
+experiment that produced it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+import json
+import warnings
+from dataclasses import dataclass, field, fields, replace
+from types import MappingProxyType
+from typing import Mapping
+
+import numpy as np
+
+from ..runtime.workload import (
+    ARRIVAL_PROCESSES,
+    Workload,
+    load_trace_csv,
+    make_workload,
+)
+
+__all__ = [
+    "ClusterSpec",
+    "WorkloadSpec",
+    "FaultSpec",
+    "PolicySpec",
+    "Scenario",
+]
+
+
+def _freeze(value):
+    """Recursively convert lists to tuples and mappings to read-only
+    proxies (at every depth) so frozen specs stay immutable (and ``==`` is
+    structural) after a JSON round trip."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, Mapping):
+        return MappingProxyType({k: _freeze(v) for k, v in value.items()})
+    return value
+
+
+def _frozen_params(params: Mapping) -> Mapping:
+    """Read-only params mapping — mutating a frozen spec's params would
+    silently desynchronise its fingerprint from already-produced results."""
+    return _freeze(dict(params))
+
+
+def _thaw(value):
+    """Specs/tuples/mappings down to plain JSON types."""
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        return {f.name: _thaw(getattr(value, f.name))
+                for f in fields(value)}
+    if isinstance(value, tuple):
+        return [_thaw(v) for v in value]
+    if isinstance(value, Mapping):
+        return {k: _thaw(v) for k, v in value.items()}
+    return value
+
+
+class _SpecBase:
+    """Shared dict/JSON plumbing for the frozen spec dataclasses."""
+
+    def to_dict(self) -> dict:
+        return _thaw(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "_SpecBase":
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"{cls.__name__}: unknown fields {sorted(unknown)}")
+        return cls(**{k: _freeze(v) for k, v in d.items()})
+
+    def replace(self, **changes):
+        return replace(self, **_freeze(changes))
+
+
+@dataclass(frozen=True)
+class ClusterSpec(_SpecBase):
+    """The machine: node powers tau_i, hyper-grid dimension, migration
+    bandwidth. Either ``powers`` is explicit, or ``n_nodes`` asks each
+    backend to sample integer powers in ``power_low..power_high`` from
+    ``power_seed`` (the paper's setup)."""
+
+    powers: tuple[float, ...] | None = None
+    n_nodes: int | None = None
+    power_low: int = 1
+    power_high: int = 10
+    power_seed: int = 0
+    d: int | None = None            # hyper-grid dimension; None = optimal_dim
+    bandwidth: float = 64.0         # packets per time unit while migrating
+
+    def __post_init__(self):
+        if (self.powers is None) == (self.n_nodes is None):
+            raise ValueError("give exactly one of powers / n_nodes")
+        if self.powers is not None:
+            object.__setattr__(self, "powers",
+                               tuple(float(p) for p in self.powers))
+            if any(p <= 0 for p in self.powers):
+                raise ValueError("powers must be > 0")
+
+    @property
+    def size(self) -> int:
+        return len(self.powers) if self.powers is not None else self.n_nodes
+
+    def resolve_powers(self) -> np.ndarray:
+        """Concrete (n,) float64 powers for this cluster."""
+        if self.powers is not None:
+            return np.asarray(self.powers, dtype=np.float64)
+        rng = np.random.default_rng(self.power_seed)
+        return rng.integers(self.power_low, self.power_high + 1,
+                            size=self.n_nodes).astype(np.float64)
+
+
+@dataclass(frozen=True)
+class WorkloadSpec(_SpecBase):
+    """The offered load: an arrival process over the paper's work/packet
+    marginals, or a trace file. ``params`` are the process kwargs
+    (``rate``, ``rate_hi``, ...); the realization seed lives on the
+    Scenario so sweeps can vary it alone."""
+
+    process: str = "poisson"
+    horizon: float | None = 100.0  # None = whole trace (trace_path only)
+    work_dist: str = "uniform"
+    work_mean: float = 4.0
+    packet_mean: float = 8.0
+    params: dict = field(default_factory=dict)
+    trace_path: str | None = None   # CSV of t_arrive,work,packets; overrides
+                                    # process/work_dist sampling entirely
+    m_tasks: int | None = None      # task-count override for the static
+                                    # legacy backend (paper: 4000)
+
+    def __post_init__(self):
+        if self.trace_path is None:
+            if self.process not in ARRIVAL_PROCESSES:
+                raise ValueError(
+                    f"unknown arrival process {self.process!r}; "
+                    f"have {sorted(ARRIVAL_PROCESSES)}")
+            if self.horizon is None:
+                raise ValueError("horizon=None (replay everything) needs a "
+                                 "trace_path; arrival processes need a "
+                                 "horizon")
+            # reject typo'd process params here, not as a mid-run TypeError
+            fn = ARRIVAL_PROCESSES[self.process]
+            allowed = {p.name for p in
+                       inspect.signature(fn).parameters.values()
+                       if p.kind == p.KEYWORD_ONLY}
+            unknown = set(self.params) - allowed
+            if unknown:
+                raise ValueError(
+                    f"process {self.process!r} params {sorted(unknown)} "
+                    f"unknown; accepted: {sorted(allowed)}")
+        object.__setattr__(self, "params", _frozen_params(self.params))
+
+    def materialize(self, seed: int) -> Workload:
+        """One concrete realization of this workload. Trace truncation at
+        the horizon is loud — a silently clipped replay would be attributed
+        to the whole trace."""
+        if self.trace_path is not None:
+            wl = load_trace_csv(self.trace_path)
+            if self.horizon is not None and wl.m:
+                keep = wl.t_arrive < self.horizon
+                kept = int(keep.sum())
+                if kept < wl.m:
+                    warnings.warn(
+                        f"trace {self.trace_path!r}: {wl.m - kept} of "
+                        f"{wl.m} tasks arrive at/after horizon="
+                        f"{self.horizon} and are dropped (declare "
+                        f'"horizon": null to replay everything)',
+                        stacklevel=2)
+                    wl = Workload(t_arrive=wl.t_arrive[keep],
+                                  works=wl.works[keep],
+                                  packets=wl.packets[keep])
+            return wl
+        return make_workload(self.process, horizon=self.horizon,
+                             work_dist=self.work_dist,
+                             work_mean=self.work_mean,
+                             packet_mean=self.packet_mean,
+                             seed=seed, **self.params)
+
+
+@dataclass(frozen=True)
+class FaultSpec(_SpecBase):
+    """Node failure/rejoin schedule: ``(time, node)`` pairs."""
+
+    failures: tuple[tuple[float, int], ...] = ()
+    joins: tuple[tuple[float, int], ...] = ()
+
+    def __post_init__(self):
+        for name in ("failures", "joins"):
+            evs = tuple((float(t), int(n)) for t, n in getattr(self, name))
+            object.__setattr__(self, name, evs)
+
+    @property
+    def empty(self) -> bool:
+        return not self.failures and not self.joins
+
+
+@dataclass(frozen=True)
+class PolicySpec(_SpecBase):
+    """The algorithm under test: a name from the runtime policy registry
+    plus its constructor kwargs and the trigger evaluation period."""
+
+    name: str = "psts"
+    trigger_period: float = 2.0
+    params: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", _frozen_params(self.params))
+
+
+_SECTIONS = {"cluster": ClusterSpec, "workload": WorkloadSpec,
+             "policy": PolicySpec, "faults": FaultSpec}
+
+
+@dataclass(frozen=True)
+class Scenario(_SpecBase):
+    """One complete experiment description.
+
+    ``seed`` drives the workload realization (the natural sweep axis);
+    ``engine_seed`` drives engine-owned randomness (stochastic policies,
+    tie-breaks) and is held fixed across a seed sweep.
+    """
+
+    cluster: ClusterSpec
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    policy: PolicySpec = field(default_factory=PolicySpec)
+    faults: FaultSpec = field(default_factory=FaultSpec)
+    seed: int = 0
+    engine_seed: int = 0
+    name: str = ""
+
+    # -- serialization ------------------------------------------------------
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        for key, section_cls in _SECTIONS.items():
+            if key in d and isinstance(d[key], dict):
+                d[key] = section_cls.from_dict(d[key])
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"Scenario: unknown fields {sorted(unknown)}")
+        return cls(**d)
+
+    def to_json(self, *, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        return cls.from_dict(json.loads(text))
+
+    def fingerprint(self) -> str:
+        """Stable 16-hex-digit identity of the canonical JSON form.
+
+        Identity covers the *declaration* only: a ``trace_path`` is hashed
+        as a path, not by file contents — results from a trace file edited
+        between runs share a fingerprint, just as two runs under any
+        changed external environment would.
+        """
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    # -- grid support -------------------------------------------------------
+    def updated(self, assignments: dict) -> "Scenario":
+        """A copy with dotted-path fields replaced: ``{"seed": 3,
+        "policy.params.floor": 0.1, "cluster.d": 2}``. The mechanism behind
+        :func:`repro.lab.sweep` grids."""
+        d = self.to_dict()
+        for path, value in assignments.items():
+            node = d
+            *parents, leaf = path.split(".")
+            for p in parents:
+                if not isinstance(node.get(p), dict):
+                    raise KeyError(f"no such scenario section: {path!r}")
+                node = node[p]
+            node[leaf] = _thaw(value)
+        return Scenario.from_dict(d)
+
+
+def _spec_hash(self) -> int:
+    """Hash by canonical JSON identity — the generated dataclass hash
+    would choke on the read-only params mappings, and frozen specs invite
+    set/dict use (dedup of expanded grids, scenario-keyed result maps)."""
+    return hash((type(self).__name__,
+                 json.dumps(self.to_dict(), sort_keys=True)))
+
+
+for _cls in (ClusterSpec, WorkloadSpec, FaultSpec, PolicySpec, Scenario):
+    _cls.__hash__ = _spec_hash

@@ -10,7 +10,13 @@ from .events import Event, EventKind, EventQueue
 from .metrics import Metrics, nearest_rank
 from .policies import POLICIES, Policy, make_policy, positional_arrival
 from .runtime import ClusterRuntime, ClusterView, Task, run_policy
-from .workload import ARRIVAL_PROCESSES, Workload, batch_slots, make_workload
+from .workload import (
+    ARRIVAL_PROCESSES,
+    Workload,
+    batch_slots,
+    load_trace_csv,
+    make_workload,
+)
 
 # The vectorized backend pulls in jax + the Pallas prefix-scan kernel; load
 # it lazily so the event engine (and repro.sched importing the policy
@@ -32,5 +38,6 @@ __all__ = [
     "ClusterRuntime", "ClusterView", "Task", "run_policy",
     "BatchMetrics", "VectorConfig", "simulate_batch", "simulate_scalar",
     "sweep_seeds",
-    "ARRIVAL_PROCESSES", "Workload", "batch_slots", "make_workload",
+    "ARRIVAL_PROCESSES", "Workload", "batch_slots", "load_trace_csv",
+    "make_workload",
 ]

@@ -71,15 +71,21 @@ class Metrics:
         return float(np.mean(self.waits)) if self.waits else float("nan")
 
     def summary(self) -> dict:
+        """The full canonical schema — every accumulated quantity. This is
+        the metric set ``repro.lab.RunResult`` carries for every backend."""
         return {
             "arrived": self.arrived,
             "completed": self.completed,
             "makespan": self.makespan,
             "mean_response": self.mean_response,
             "p99_response": self.p99_response,
+            "mean_wait": self.mean_wait,
             "migrations": self.migrations,
             "moved_packets": self.moved_packets,
+            "moved_units": self.moved_units,
             "trigger_evals": self.trigger_evals,
             "trigger_fires": self.trigger_fires,
             "restarts": self.restarts,
+            "failures": self.failures,
+            "joins": self.joins,
         }

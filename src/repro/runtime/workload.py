@@ -32,6 +32,7 @@ __all__ = [
     "trace_arrivals",
     "ARRIVAL_PROCESSES",
     "make_workload",
+    "load_trace_csv",
     "to_slots",
     "batch_slots",
 ]
@@ -157,6 +158,33 @@ def make_workload(process: str = "poisson", *, horizon: float = 100.0,
         works=sample_works(m, work_dist, work_mean, rng),
         packets=sample_packets(m, packet_mean, rng),
     )
+
+
+def load_trace_csv(path, *, horizon: float | None = None) -> Workload:
+    """Load a cluster trace from CSV rows of ``t_arrive, work, packets``.
+
+    The minimal interchange format for real cluster traces (first step toward
+    Google cluster-data / Azure Packing Trace replay): one task per row, ``#``
+    comments and blank lines ignored, rows in any order (sorted by arrival
+    here). ``horizon`` clips tasks arriving at or after it, matching the
+    ``trace`` arrival process.
+    """
+    rows = np.loadtxt(path, delimiter=",", comments="#", ndmin=2,
+                      dtype=np.float64)
+    if rows.size == 0:
+        rows = rows.reshape(0, 3)
+    if rows.shape[1] != 3:
+        raise ValueError(
+            f"trace {path!r}: expected 3 columns (t_arrive, work, packets), "
+            f"got {rows.shape[1]}")
+    order = np.argsort(rows[:, 0], kind="stable")
+    t, works, packets = rows[order].T
+    if horizon is not None:
+        keep = t < horizon
+        t, works, packets = t[keep], works[keep], packets[keep]
+    if (works <= 0).any() or (packets <= 0).any():
+        raise ValueError(f"trace {path!r}: work and packets must be > 0")
+    return Workload(t_arrive=t, works=works, packets=packets)
 
 
 # ---------------------------------------------------------------------------

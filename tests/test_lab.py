@@ -1,0 +1,458 @@
+"""Declarative Scenario/Experiment API over the three backends
+(ISSUE 2 tentpole): JSON round trips, eligibility, auto-dispatch, CLI,
+nearest-rank edge cases, trace loading."""
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import lab
+from repro.lab.cli import main as lab_cli
+from repro.runtime.metrics import nearest_rank
+from repro.runtime.workload import load_trace_csv
+
+POWERS = (3.0, 1.0, 7.0, 2.0, 5.0, 9.0, 4.0, 6.0,
+          2.0, 8.0, 1.0, 5.0, 3.0, 6.0, 4.0, 7.0)
+TRACE = Path(__file__).parent / "data" / "tiny_trace.csv"
+
+
+def _scenario(**overrides) -> lab.Scenario:
+    fields = dict(
+        cluster=lab.ClusterSpec(powers=POWERS, bandwidth=256.0),
+        workload=lab.WorkloadSpec(process="poisson", horizon=100.0,
+                                  work_mean=6.0, params={"rate": 6.0}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.1}),
+        seed=0)
+    fields.update(overrides)
+    return lab.Scenario(**fields)
+
+
+# ---------------------------------------------------------------------------
+# Scenario serialization
+# ---------------------------------------------------------------------------
+
+def test_scenario_json_round_trip_identical_fingerprint():
+    sc = _scenario(faults=lab.FaultSpec(failures=((30.0, 2),),
+                                        joins=((60.0, 2),)))
+    text = sc.to_json()
+    back = lab.Scenario.from_json(text)
+    assert back == sc
+    assert back.fingerprint() == sc.fingerprint()
+    # and a second round trip through plain dicts (lists, not tuples)
+    again = lab.Scenario.from_dict(json.loads(text))
+    assert again.fingerprint() == sc.fingerprint()
+
+
+def test_fingerprint_sensitive_to_every_section():
+    sc = _scenario()
+    assert sc.updated({"seed": 1}).fingerprint() != sc.fingerprint()
+    assert (sc.updated({"policy.params.floor": 0.2}).fingerprint()
+            != sc.fingerprint())
+    assert (sc.updated({"workload.work_mean": 5.0}).fingerprint()
+            != sc.fingerprint())
+    assert (sc.updated({"cluster.bandwidth": 64.0}).fingerprint()
+            != sc.fingerprint())
+
+
+def test_unknown_fields_rejected():
+    d = _scenario().to_dict()
+    d["workload"]["typo_field"] = 1
+    with pytest.raises(ValueError, match="typo_field"):
+        lab.Scenario.from_dict(d)
+    with pytest.raises(ValueError, match="unknown fields"):
+        lab.Scenario.from_dict({**_scenario().to_dict(), "nope": 1})
+
+
+def test_typo_workload_param_rejected_at_spec_time():
+    with pytest.raises(ValueError, match="rte"):
+        lab.WorkloadSpec(process="poisson", params={"rte": 8.0})
+    with pytest.raises(ValueError, match="sojourn"):
+        lab.WorkloadSpec(process="bursty", params={"sojourn": 5.0})
+
+
+def test_run_many_empty_returns_empty():
+    assert lab.get_backend("batched").run_many([]) == []
+    assert lab.sweep([]) == []
+
+
+def test_cluster_spec_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        lab.ClusterSpec(powers=POWERS, n_nodes=16)
+    with pytest.raises(ValueError, match="exactly one"):
+        lab.ClusterSpec()
+    sampled = lab.ClusterSpec(n_nodes=8, power_seed=3)
+    p = sampled.resolve_powers()
+    assert p.shape == (8,) and (p >= 1).all() and (p <= 10).all()
+    np.testing.assert_array_equal(p, sampled.resolve_powers())
+
+
+def test_spec_params_are_read_only():
+    """Mutating a frozen spec's params would silently desynchronise its
+    fingerprint from already-produced results."""
+    sc = _scenario()
+    with pytest.raises(TypeError):
+        sc.policy.params["floor"] = 0.9
+    with pytest.raises(TypeError):
+        sc.workload.params["rate"] = 1.0
+    # immutability reaches nested mappings too
+    nested = lab.PolicySpec("psts", params={"floor": 0.1,
+                                            "meta": {"x": 1}})
+    with pytest.raises(TypeError):
+        nested.params["meta"]["x"] = 99
+
+
+def test_cli_grid_rejects_float_ranges_with_hint():
+    from repro.lab.cli import _parse_grid
+    with pytest.raises(SystemExit, match="comma list"):
+        _parse_grid(["policy.params.floor=0.05:0.1"])
+    assert _parse_grid(["seed=0:6:2"]) == {"seed": [0, 2, 4]}
+    assert _parse_grid(["policy.params.floor=0.05,0.1"]) == {
+        "policy.params.floor": [0.05, 0.1]}
+
+
+def test_expand_grid_product():
+    scs = lab.expand_grid(_scenario(), {"seed": range(3),
+                                        "policy.params.floor": [0.05, 0.1]})
+    assert len(scs) == 6
+    assert len({sc.fingerprint() for sc in scs}) == 6
+    # frozen specs are hashable (set dedup, scenario-keyed result maps)
+    assert len(set(scs)) == 6
+    assert len(set(scs + [scs[0]])) == 6
+
+
+# ---------------------------------------------------------------------------
+# Backends: same scenario, same schema; eligibility rules
+# ---------------------------------------------------------------------------
+
+def test_all_three_backends_same_scenario_same_schema():
+    """The acceptance criterion: one identical Scenario executes on all
+    three backends and every RunResult carries the identical metric keys."""
+    sc = _scenario()
+    results = {name: lab.run(sc, backend=name)
+               for name in ("events", "batched", "legacy")}
+    for name, r in results.items():
+        assert tuple(r.metrics) == lab.METRIC_SCHEMA, name
+        assert r.fingerprint == sc.fingerprint()
+        assert r.backend == name
+    assert results["legacy"].extras["crossover"] > 0
+
+
+def test_events_vs_batched_equivalence_smoke():
+    """The fluid backend is an approximation of the discrete engine, not a
+    bit-identical twin — but on a moderately loaded cluster their mean
+    response must land in the same regime."""
+    sc = _scenario()
+    ev = lab.run(sc, backend="events")
+    ba = lab.run(sc, backend="batched")
+    assert ev["completed"] == ba["completed"]
+    rel = abs(ev["mean_response"] - ba["mean_response"]) / ev["mean_response"]
+    assert rel < 0.5, (ev["mean_response"], ba["mean_response"])
+
+
+def test_batched_rejects_per_task_policies():
+    sc = _scenario(policy=lab.PolicySpec("jsq"))
+    reason = lab.get_backend("batched").eligible(sc)
+    assert reason is not None and "per-task" in reason
+    with pytest.raises(lab.BackendError, match="positional"):
+        lab.run(sc, backend="batched")
+    # but the events backend takes it
+    assert lab.get_backend("events").eligible(sc) is None
+
+
+def test_batched_rejects_join_without_failure():
+    sc = _scenario(faults=lab.FaultSpec(joins=((10.0, 2),)))
+    with pytest.raises(lab.BackendError, match="no earlier failure"):
+        lab.run(sc, backend="batched")
+    # ordered failure -> join is fine
+    ok = _scenario(faults=lab.FaultSpec(failures=((5.0, 2),),
+                                        joins=((10.0, 2),)))
+    assert lab.get_backend("batched").eligible(ok) is None
+
+
+def test_legacy_rejects_faults_and_foreign_policies():
+    backend = lab.get_backend("legacy")
+    assert backend.eligible(_scenario(
+        faults=lab.FaultSpec(failures=((10.0, 0),)))) is not None
+    assert backend.eligible(_scenario(
+        policy=lab.PolicySpec("jsq"))) is not None
+    with pytest.raises(lab.BackendError, match="no timeline"):
+        lab.run(_scenario(faults=lab.FaultSpec(failures=((10.0, 0),))),
+                backend="legacy")
+
+
+def test_fault_node_out_of_range_rejected():
+    sc = _scenario(faults=lab.FaultSpec(failures=((10.0, 99),)))
+    with pytest.raises(lab.BackendError, match="outside"):
+        lab.run(sc, backend="events")
+
+
+def test_batched_rejects_total_outage_schedule():
+    """The fluid model cannot park work through a total outage; the events
+    backend can (tested in test_runtime), so this must be an eligibility
+    error, not garbage metrics."""
+    dead = lab.FaultSpec(failures=tuple((10.0, n) for n in range(16)))
+    sc = _scenario(faults=dead)
+    with pytest.raises(lab.BackendError, match="all 16 nodes down"):
+        lab.run(sc, backend="batched")
+    # one survivor is fine
+    almost = lab.FaultSpec(failures=tuple((10.0, n) for n in range(15)))
+    assert lab.get_backend("batched").eligible(
+        _scenario(faults=almost)) is None
+
+
+def test_engine_seed_listed_as_ignored_off_events():
+    for name in ("batched", "legacy"):
+        r = lab.run(_scenario(), backend=name)
+        assert "engine_seed" in r.backend_options["ignored"], name
+
+
+def test_trace_seed_sweep_warns_degenerate_axis():
+    import warnings
+    sc = _scenario(workload=lab.WorkloadSpec(trace_path=str(TRACE),
+                                             horizon=20.0))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        lab.sweep(base=sc, grid={"seed": range(9)})
+        assert any("identical trace" in str(x.message) for x in w)
+
+
+def test_batched_faults_match_power_schedule():
+    """A failure mid-run must cost response time in the fluid model too."""
+    healthy = _scenario()
+    hurt = _scenario(faults=lab.FaultSpec(failures=((30.0, 5),)))
+    r_h = lab.run(healthy, backend="batched")
+    r_f = lab.run(hurt, backend="batched")
+    assert r_f["mean_response"] > r_h["mean_response"]
+    assert r_f["failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sweep: auto-dispatch
+# ---------------------------------------------------------------------------
+
+def test_sweep_auto_dispatches_large_uniform_seed_sweeps():
+    res = lab.sweep(base=_scenario(), grid={"seed": range(10)},
+                    batch_threshold=8)
+    assert [r.backend for r in res] == ["batched"] * 10
+    # distinct seeds -> distinct scenarios -> distinct fingerprints
+    assert len({r.fingerprint for r in res}) == 10
+
+
+def test_sweep_small_or_nonuniform_stays_on_events():
+    small = lab.sweep(base=_scenario(), grid={"seed": range(3)})
+    assert [r.backend for r in small] == ["events"] * 3
+    mixed = lab.sweep(base=_scenario(policy=lab.PolicySpec("psts")),
+                      grid={"seed": range(5),
+                            "policy.name": ["arrival_only", "psts"]},
+                      batch_threshold=4)
+    assert {r.backend for r in mixed} == {"events"}
+
+
+def test_stale_policy_params_fail_fast_with_reason():
+    """Gridding policy.name keeps the base params; a param the new policy
+    cannot take must surface as an upfront eligibility error, not a raw
+    constructor TypeError after some scenarios already ran."""
+    base = _scenario()  # psts with floor=0.1
+    bad = base.updated({"policy.name": "jsq"})
+    reason = lab.get_backend("events").eligible(bad)
+    assert reason is not None and "floor" in reason
+    with pytest.raises(lab.BackendError, match="floor"):
+        lab.sweep([base.updated({"policy.name": "psts"}), bad])
+
+
+def test_backend_provenance_lists_ignored_fields():
+    sc = _scenario()
+    assert "policy.trigger_period" in \
+        lab.run(sc, backend="batched").backend_options["ignored"]
+    assert "workload arrival times" in \
+        lab.run(sc, backend="legacy").backend_options["ignored"]
+
+
+def test_trace_horizon_none_replays_whole_file():
+    sc = _scenario(workload=lab.WorkloadSpec(trace_path=str(TRACE),
+                                             horizon=None))
+    assert sc.workload.materialize(0).m == 8  # nothing clipped
+    r = lab.run(sc, backend="batched")
+    assert r["completed"] == 8
+    assert r.backend_options["n_slots"] >= 13  # covers the t=12 arrival
+    with pytest.raises(ValueError, match="needs a trace_path"):
+        lab.WorkloadSpec(process="poisson", horizon=None)
+
+
+def test_typo_policy_param_rejected_on_every_backend():
+    """A typo'd param must fail everywhere — never silently dropped by one
+    backend while another rejects it (auto-dispatch would otherwise make
+    the same sweep fail or run depending on its size)."""
+    sc = _scenario(policy=lab.PolicySpec("psts", params={"flor": 0.9}))
+    for name in ("events", "batched", "legacy"):
+        reason = lab.get_backend(name).eligible(sc)
+        assert reason is not None and "flor" in reason, name
+    # both a small (events) and a large (batched) auto sweep must fail
+    for n in (2, 16):
+        with pytest.raises(lab.BackendError, match="flor"):
+            lab.sweep(base=sc, grid={"seed": range(n)}, backend="auto")
+
+
+def test_batched_defaults_match_psts_policy_defaults():
+    """A PolicySpec('psts') with no params must run the same trigger
+    constants on both dynamic backends (floor 0.05, the policy default —
+    not VectorConfig's 0.1)."""
+    from repro.runtime.policies import PstsPolicy
+    sc = _scenario(policy=lab.PolicySpec("psts"))
+    backend = lab.get_backend("batched")
+    *_, cfg, _ = backend.compile([sc], backend.default_dt)
+    pdef = PstsPolicy()
+    for k in ("floor", "p", "q", "t_task", "packets_per_step"):
+        assert getattr(cfg, k) == getattr(pdef, k), k
+
+
+def test_trace_packets_per_unit_from_trace_not_defaults():
+    """The batched migration-cost term must use the trace's own
+    packet/work ratio, not the spec's unused sampling means."""
+    sc = _scenario(workload=lab.WorkloadSpec(trace_path=str(TRACE),
+                                             horizon=None))
+    backend = lab.get_backend("batched")
+    *_, cfg, _ = backend.compile([sc], backend.default_dt)
+    wl = sc.workload.materialize(0)
+    expect = float(wl.packets.sum() / wl.works.sum())
+    assert cfg.packets_per_unit == pytest.approx(expect)
+    assert cfg.packets_per_unit != pytest.approx(8.0 / 4.0)
+
+
+def test_run_many_rejects_nonuniform_batch():
+    """The batched backend refuses to silently simulate a mixed batch with
+    the first scenario's cluster/horizon."""
+    backend = lab.get_backend("batched")
+    mixed = [_scenario(),
+             _scenario(workload=lab.WorkloadSpec(horizon=60.0,
+                                                 params={"rate": 6.0}))]
+    with pytest.raises(lab.BackendError, match="identical except"):
+        backend.run_many(mixed)
+
+
+def test_sweep_ineligible_policy_falls_back_to_events():
+    res = lab.sweep(base=_scenario(policy=lab.PolicySpec("jsq")),
+                    grid={"seed": range(10)}, batch_threshold=8)
+    assert {r.backend for r in res} == {"events"}
+
+
+# ---------------------------------------------------------------------------
+# CLI: scenario files round-trip end to end
+# ---------------------------------------------------------------------------
+
+def test_cli_template_run_round_trip(tmp_path, capsys):
+    assert lab_cli(["template", "--preset", "basic"]) == 0
+    text = capsys.readouterr().out
+    sc_file = tmp_path / "scenario.json"
+    sc_file.write_text(text)
+    scenario = lab.Scenario.from_json(text)
+
+    out = tmp_path / "result.json"
+    assert lab_cli(["run", str(sc_file), "--backend", "events",
+                    "--out", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert len(payload) == 1
+    result = lab.RunResult.from_dict(payload[0])
+    assert result.fingerprint == scenario.fingerprint()
+    assert tuple(result.metrics) == lab.METRIC_SCHEMA
+    assert result.metrics["completed"] == result.metrics["arrived"] > 0
+
+
+def test_cli_sweep_grid_and_backends_report(tmp_path, capsys):
+    sc_file = tmp_path / "scenario.json"
+    sc_file.write_text(_scenario().to_json())
+    out = tmp_path / "sweep.json"
+    assert lab_cli(["sweep", str(sc_file), "--grid", "seed=0:10",
+                    "--batch-threshold", "8", "--out", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert len(payload) == 10
+    assert {p["backend"] for p in payload} == {"batched"}
+
+    assert lab_cli(["backends", str(sc_file)]) == 0
+    report = capsys.readouterr().out
+    assert "events" in report and "eligible" in report
+
+
+# ---------------------------------------------------------------------------
+# nearest_rank edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_nearest_rank_empty_is_nan():
+    assert math.isnan(nearest_rank(np.array([]), 99.0))
+
+
+def test_nearest_rank_single_value_any_percentile():
+    for pct in (0.0, 1.0, 50.0, 99.0, 100.0):
+        assert nearest_rank(np.array([7.5]), pct) == 7.5
+
+
+def test_nearest_rank_pct_100_is_max_and_small_pct_is_min():
+    values = np.array([5.0, 1.0, 9.0, 3.0])
+    assert nearest_rank(values, 100.0) == 9.0
+    assert nearest_rank(values, 1e-9) == 1.0
+    assert nearest_rank(values, 50.0) == 3.0  # ceil(0.5*4)=2nd smallest
+
+
+# ---------------------------------------------------------------------------
+# trace loader (satellite)
+# ---------------------------------------------------------------------------
+
+def test_load_trace_csv_sorts_and_clips():
+    wl = load_trace_csv(TRACE)
+    assert wl.m == 8
+    assert (np.diff(wl.t_arrive) >= 0).all()  # fixture rows are unsorted
+    assert wl.t_arrive[0] == 0.0 and wl.t_arrive[-1] == 12.0
+    clipped = load_trace_csv(TRACE, horizon=5.0)
+    assert clipped.m == 4 and (clipped.t_arrive < 5.0).all()
+    # works/packets follow their rows through the sort
+    i = int(np.searchsorted(wl.t_arrive, 2.5))
+    assert wl.works[i] == 6.0 and wl.packets[i] == 12.0
+
+
+def test_load_trace_csv_rejects_bad_shapes(tmp_path):
+    bad = tmp_path / "bad.csv"
+    bad.write_text("1.0,2.0\n")
+    with pytest.raises(ValueError, match="3 columns"):
+        load_trace_csv(bad)
+    nonpos = tmp_path / "nonpos.csv"
+    nonpos.write_text("0.0,0.0,1.0\n")
+    with pytest.raises(ValueError, match="> 0"):
+        load_trace_csv(nonpos)
+
+
+def test_trace_truncation_is_loud_and_missing_trace_is_ineligible(tmp_path):
+    import warnings as _w
+    sc = _scenario(workload=lab.WorkloadSpec(trace_path=str(TRACE),
+                                             horizon=5.0))
+    with _w.catch_warnings(record=True) as w:
+        _w.simplefilter("always")
+        assert sc.workload.materialize(0).m == 4
+        assert any("dropped" in str(x.message) for x in w)
+    missing = _scenario(workload=lab.WorkloadSpec(
+        trace_path=str(tmp_path / "nope.csv"), horizon=None))
+    for name in ("events", "batched"):
+        reason = lab.get_backend(name).eligible(missing)
+        assert reason is not None and "unreadable" in reason, name
+
+
+def test_trace_scenario_through_lab():
+    sc = _scenario(workload=lab.WorkloadSpec(trace_path=str(TRACE),
+                                             horizon=20.0))
+    wl = sc.workload.materialize(sc.seed)
+    assert wl.m == 8
+    r = lab.run(sc, backend="events")
+    assert r["completed"] == 8
+    # legacy cannot replay traces; the reason says so
+    assert "trace" in lab.get_backend("legacy").eligible(sc)
+
+
+def test_full_metrics_summary_schema():
+    """Metrics.summary() is the canonical schema (satellite: mean_wait,
+    moved_units, failures, joins included)."""
+    from repro.runtime.metrics import Metrics
+    s = Metrics().summary()
+    assert tuple(s) == lab.METRIC_SCHEMA
