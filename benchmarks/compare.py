@@ -1,0 +1,163 @@
+"""Benchmark-trajectory regression gate (ISSUE 3 satellite).
+
+Compares a freshly produced ``benchmarks/run.py --json`` artifact against a
+committed baseline (``BENCH_*.json``) and exits nonzero when a key metric
+regresses by more than ``--threshold`` (default 10%). This is what turns
+the committed ``BENCH_*.json`` trajectory into an enforced contract: PR 1-2
+performance claims (and this PR's federation claims) fail CI when broken.
+
+Key metrics are *quality* numbers (mean/P99 response, error bounds,
+speedup ratios) — stable across machines. Raw ``us_per_call`` timings are
+noisy on shared CI runners and are only checked with ``--include-timing``
+(useful locally, with a generous threshold).
+
+Usage::
+
+    python benchmarks/run.py --json BENCH_new.json
+    python benchmarks/compare.py BENCH_PR3.json BENCH_new.json
+    python benchmarks/compare.py --baseline-glob 'BENCH_*.json' BENCH_new.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import re
+import sys
+
+# derived metrics that gate, with their good direction
+LOWER_IS_BETTER = (
+    "mean_resp",
+    "p99_resp",
+    "mean_wait",
+    "max_rel_err",
+    "overhead",
+    "us_per_call",  # only with --include-timing
+)
+HIGHER_IS_BETTER = (
+    "speedup",
+    "isolated_over_full",
+)
+# below this absolute scale, relative comparison is meaningless noise
+ABS_FLOOR = 1e-9
+
+
+def _load(path: str) -> dict:
+    with open(path) as fh:
+        records = json.load(fh)
+    return {(r["suite"], r["name"]): r for r in records}
+
+
+def _direction(metric: str) -> int:
+    """+1 lower-is-better, -1 higher-is-better, 0 not a key metric."""
+    for key in LOWER_IS_BETTER:
+        if metric == key or metric.startswith(key):
+            return 1
+    for key in HIGHER_IS_BETTER:
+        if metric == key or metric.startswith(key):
+            return -1
+    return 0
+
+
+def _as_number(value):
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        return None
+    return float(value)
+
+
+def compare(baseline: dict, fresh: dict, threshold: float,
+            include_timing: bool) -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes)."""
+    regressions, notes = [], []
+    for key, old in sorted(baseline.items()):
+        new = fresh.get(key)
+        if new is None:
+            notes.append(f"MISSING  {key[0]}/{key[1]} (in baseline, not in "
+                         f"fresh run)")
+            continue
+        pairs = [(m, old["derived"].get(m), new["derived"].get(m))
+                 for m in old["derived"]]
+        if include_timing:
+            pairs.append(("us_per_call", old.get("us_per_call"),
+                          new.get("us_per_call")))
+        for metric, ov, nv in pairs:
+            sign = _direction(metric)
+            if sign == 0 or (metric == "us_per_call"
+                             and not include_timing):
+                continue
+            ov, nv = _as_number(ov), _as_number(nv)
+            if ov is None or nv is None:
+                continue
+            if isinstance(ov, float) and abs(ov) < ABS_FLOOR:
+                continue  # zero/noise baseline: nothing to regress from
+            ratio = (nv - ov) / abs(ov) * sign
+            if ratio > threshold:
+                regressions.append(
+                    f"REGRESSED {key[0]}/{key[1]} {metric}: "
+                    f"{ov:g} -> {nv:g} "
+                    f"({ratio * 100.0:+.1f}% vs {threshold * 100.0:.0f}% "
+                    f"budget)")
+    new_only = sorted(set(fresh) - set(baseline))
+    if new_only:
+        notes.append(f"NEW      {len(new_only)} record(s) without baseline "
+                     f"(first: {new_only[0][0]}/{new_only[0][1]})")
+    return regressions, notes
+
+
+def _natural_key(name: str) -> list:
+    """Digit runs compare numerically, so BENCH_PR10 sorts after BENCH_PR9
+    (plain lexicographic sort would pick PR9 as 'newest' forever)."""
+    return [int(tok) if tok.isdigit() else tok
+            for tok in re.split(r"(\d+)", name)]
+
+
+def newest_baseline(pattern: str, exclude: str) -> str:
+    """Newest committed trajectory file by natural name sort."""
+    candidates = sorted((p for p in glob.glob(pattern) if p != exclude),
+                        key=_natural_key)
+    if not candidates:
+        raise SystemExit(f"no baseline matches {pattern!r}")
+    return candidates[-1]
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(
+        description="fail when fresh benchmark results regress >threshold "
+                    "against a committed BENCH_*.json baseline")
+    parser.add_argument("baseline", nargs="?", default=None,
+                        help="baseline JSON (omit with --baseline-glob)")
+    parser.add_argument("fresh", help="freshly produced benchmark JSON")
+    parser.add_argument("--baseline-glob", default=None, metavar="GLOB",
+                        help="pick the newest (name-sorted) match instead "
+                             "of naming the baseline explicitly")
+    parser.add_argument("--threshold", type=float, default=0.10,
+                        help="allowed relative regression (default 0.10)")
+    parser.add_argument("--include-timing", action="store_true",
+                        help="also gate raw us_per_call timings (noisy on "
+                             "shared runners)")
+    args = parser.parse_args()
+
+    if (args.baseline is None) == (args.baseline_glob is None):
+        parser.error("give exactly one of BASELINE or --baseline-glob")
+    baseline_path = (args.baseline if args.baseline is not None
+                     else newest_baseline(args.baseline_glob, args.fresh))
+    print(f"baseline: {baseline_path}")
+    print(f"fresh:    {args.fresh}")
+    regressions, notes = compare(_load(baseline_path), _load(args.fresh),
+                                 args.threshold, args.include_timing)
+    for line in notes:
+        print(line)
+    for line in regressions:
+        print(line)
+    if regressions:
+        print(f"FAIL: {len(regressions)} metric(s) regressed beyond "
+              f"{args.threshold * 100.0:.0f}%")
+        return 1
+    print("OK: no key metric regressed beyond "
+          f"{args.threshold * 100.0:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

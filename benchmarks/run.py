@@ -44,6 +44,11 @@ def _suites():
         suites.append(("runtime", bench_runtime.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_federation
+        suites.append(("federation", bench_federation.ALL))
+    except ImportError:
+        pass
     return suites
 
 

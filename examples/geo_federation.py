@@ -1,0 +1,87 @@
+"""Geo-federation walkthrough: the paper's positional rule one level up.
+
+Four geo-distributed datacenters, each its own ``lab.Scenario`` (8-node
+heterogeneous cluster, PSTS inside), federated over WAN links. Datacenter 0
+is overloaded (offered work ~2x its power) while the other three idle —
+the skew a federation exists to absorb. The top-level balancer applies the
+paper's dimension-k positional rule across clusters every
+``exchange_period``, with reservation-style admission: a task crosses the
+WAN only when its predicted completion improves after paying
+``latency + packets / bandwidth``.
+
+The same Federation runs isolated (topology "isolated") as the baseline,
+and as a homogeneous link-free federation it auto-lowers to ONE compiled
+``lax.scan`` batch — the vectorized fast path.
+
+Run: PYTHONPATH=src python examples/geo_federation.py
+"""
+
+from repro import lab
+
+RATES = [12.0, 2.0, 2.0, 2.0]  # datacenter 0 is the hotspot
+
+
+def member(i: int, rate: float) -> lab.Scenario:
+    return lab.Scenario(
+        name=f"dc{i}",
+        cluster=lab.ClusterSpec(n_nodes=8, power_seed=i, bandwidth=256.0),
+        workload=lab.WorkloadSpec(process="poisson", horizon=100.0,
+                                  work_mean=6.0, params={"rate": rate}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        seed=i)
+
+
+def main():
+    fed = lab.Federation(
+        name="geo-federation",
+        members=tuple(member(i, r) for i, r in enumerate(RATES)),
+        topology=lab.TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+    offered = [r * 6.0 for r in RATES]
+    print(f"federation: 4 datacenters x 8 nodes, offered work/time "
+          f"{[f'{o:.0f}' for o in offered]}")
+    print(f"WAN: full mesh, 8 packets/time, latency 2.0; "
+          f"fingerprint {fed.fingerprint()}\n")
+
+    print(f"{'topology':<10} {'mean':>8} {'p99':>9} {'makespan':>9} "
+          f"{'wan_moves':>9} {'rejected':>9}")
+    results = {}
+    for kind in ["isolated", "line", "ring", "star", "full"]:
+        sc = fed.replace(topology=lab.TopologySpec(
+            kind=kind, bandwidth=8.0, latency=2.0))
+        r = lab.run(sc, backend="federated", vectorize=False)
+        assert r["completed"] == r["arrived"]  # conservation across the WAN
+        results[kind] = r
+        wan = r.extras["wan"]
+        print(f"{kind:<10} {r['mean_response']:>8.3f} "
+              f"{r['p99_response']:>9.3f} {r['makespan']:>9.1f} "
+              f"{wan['migrations']:>9d} {wan['rejected']:>9d}")
+
+    gain = (results["isolated"]["mean_response"]
+            / results["full"]["mean_response"])
+    print(f"\nfederated (full) beats isolated by {gain:.1f}x mean "
+          f"completion time under this skew")
+
+    print("\nper-datacenter view (full mesh): the hotspot exports work")
+    for m in results["full"].extras["members"]:
+        mm = m["metrics"]
+        print(f"  {m['scenario_name']}: arrived {mm['arrived']:>4d}, "
+              f"completed {mm['completed']:>4d}, "
+              f"mean {mm['mean_response']:.3f}")
+
+    print("\nvectorized fast path: 8 identical isolated members -> one "
+          "lax.scan batch")
+    uniform = lab.Federation(
+        members=tuple(member(0, 6.0).replace(seed=i, name=f"m{i}")
+                      for i in range(8)),
+        topology=lab.TopologySpec(kind="isolated"))
+    r = lab.run(uniform, backend="federated")
+    assert r.backend_options["model"] == "fluid-batched"
+    print(f"aggregate over {len(r.extras['members'])} members: "
+          f"mean response {r['mean_response']:.3f}, "
+          f"makespan {r['makespan']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ the multi-pod dry-run (ShapeDtypeStruct, no allocation).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 __all__ = ["ModelConfig", "ShapeSpec", "SHAPES"]
 

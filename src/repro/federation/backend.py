@@ -1,0 +1,148 @@
+"""``federated`` — the fourth ``repro.lab`` backend.
+
+Consumes a :class:`~repro.federation.specs.Federation` (not a single
+Scenario) and returns ONE aggregate :class:`~repro.lab.result.RunResult`
+in the canonical metric schema, with every per-member RunResult under
+``extras["members"]`` and the WAN accounting under ``extras["wan"]`` — so
+``lab.run`` / ``lab.sweep`` / the CLI treat a federation exactly like any
+other experiment.
+
+Two execution models:
+
+* lockstep events (the reference): N ``ClusterRuntime`` s stepped in
+  ``exchange_period`` epochs with the top-level positional balancer moving
+  admitted work over WAN links (``FederatedRuntime``).
+* a vectorized fast path for the no-exchange case: a link-free federation
+  of members that are uniform-but-for-seed lowers to ONE compiled
+  ``lax.scan`` call on the existing batched backend — the isolated baseline
+  of a federation benchmark costs one accelerator dispatch, not N engine
+  runs. Auto-selected; force with ``vectorize=True/False``.
+"""
+
+from __future__ import annotations
+
+from ..lab.backends import (
+    Backend,
+    BackendError,
+    get_backend,
+    register_backend,
+    uniform_but_for_seed,
+)
+from ..lab.result import RunResult, make_metrics
+from ..runtime.metrics import Metrics
+from .runtime import FederatedRuntime
+from .specs import Federation
+
+__all__ = ["FederatedBackend"]
+
+
+def _member_result(member, metrics: Metrics) -> RunResult:
+    return RunResult(
+        fingerprint=member.fingerprint(), backend="federated",
+        backend_options={"model": "lockstep-events"},
+        metrics=make_metrics(**metrics.summary()),
+        scenario_name=member.name)
+
+
+@register_backend
+class FederatedBackend(Backend):
+    name = "federated"
+
+    def eligible(self, spec):
+        if not getattr(spec, "is_federation", False):
+            return ("runs Federation specs (N member Scenarios over a WAN "
+                    "topology); a single Scenario runs on events/batched/"
+                    "legacy")
+        events = get_backend("events")
+        for i, member in enumerate(spec.members):
+            reason = events.eligible(member)
+            if reason is not None:
+                return f"member {i} ({member.name or 'unnamed'}): {reason}"
+        try:
+            spec.topology.resolve(spec.n_members)
+        except ValueError as exc:
+            return str(exc)
+        return None
+
+    def run(self, spec, *, vectorize: bool | None = None,
+            **options) -> RunResult:
+        if options:
+            raise TypeError(f"federated backend options: vectorize only; "
+                            f"got {sorted(options)}")
+        self.check(spec)
+        members = list(spec.members)
+        links = spec.topology.resolve(spec.n_members)
+        batched = get_backend("batched")
+        can_vectorize = (not links and uniform_but_for_seed(members)
+                         and batched.eligible(members[0]) is None)
+        if vectorize is None:
+            vectorize = can_vectorize
+        elif vectorize and not can_vectorize:
+            raise BackendError(
+                "federated backend: the vectorized fast path covers "
+                "link-free federations whose members are uniform but for "
+                "seed/name and batched-eligible; this one "
+                + ("has WAN links" if links else
+                   "is not expressible on the batched backend"))
+        if vectorize:
+            return self._run_vectorized(spec, members, batched)
+        return self._run_lockstep(spec, members)
+
+    # -- lockstep events (reference) ----------------------------------------
+    def _run_lockstep(self, spec: Federation, members) -> RunResult:
+        report = FederatedRuntime(spec).run()
+        per_member = [_member_result(m, rm)
+                      for m, rm in zip(members, report.members)]
+        return RunResult(
+            fingerprint=spec.fingerprint(), backend=self.name,
+            backend_options={
+                "model": "lockstep-events",
+                "n_members": spec.n_members,
+                "links": len(spec.topology.resolve(spec.n_members)),
+                "exchange_period": spec.exchange_period,
+            },
+            metrics=make_metrics(**report.aggregate.summary()),
+            extras={
+                "members": [r.to_dict() for r in per_member],
+                "wan": report.wan.to_dict(),
+                "epochs": report.epochs,
+            },
+            scenario_name=spec.name)
+
+    # -- vectorized isolated fast path --------------------------------------
+    def _run_vectorized(self, spec: Federation, members,
+                        batched) -> RunResult:
+        results = batched.run_many(members)
+        agg: dict = {}
+        completed = sum(r["completed"] for r in results)
+        agg["arrived"] = sum(r["arrived"] for r in results)
+        agg["completed"] = completed
+        agg["makespan"] = max(r["makespan"] for r in results)
+        if completed:
+            agg["mean_response"] = sum(
+                r["mean_response"] * r["completed"] for r in results
+                if r["completed"]) / completed
+        agg["moved_units"] = sum(r["moved_units"] for r in results)
+        agg["moved_packets"] = sum(r["moved_packets"] for r in results)
+        agg["trigger_evals"] = sum(r["trigger_evals"] for r in results)
+        agg["trigger_fires"] = sum(r["trigger_fires"] for r in results)
+        agg["restarts"] = sum(r["restarts"] for r in results)
+        agg["failures"] = sum(r["failures"] for r in results)
+        agg["joins"] = sum(r["joins"] for r in results)
+        # p99/mean_wait stay None: the fluid batch keeps no per-task
+        # response sample to pool across members
+        return RunResult(
+            fingerprint=spec.fingerprint(), backend=self.name,
+            backend_options={
+                "model": "fluid-batched",
+                "n_members": spec.n_members,
+                "links": 0,
+                "ignored": ["exchange_period", "admission_margin"],
+            },
+            metrics=make_metrics(**agg),
+            extras={
+                "members": [r.to_dict() for r in results],
+                "wan": {"epochs": 0, "migrations": 0, "moved_units": 0.0,
+                        "moved_packets": 0.0, "rejected": 0},
+            },
+            scenario_name=spec.name)

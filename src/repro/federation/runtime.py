@@ -1,0 +1,206 @@
+"""Lockstep multi-cluster runtime: N event engines exchanging work over WAN.
+
+Each member cluster is one :class:`~repro.runtime.runtime.ClusterRuntime`
+(full event-driven fidelity: FIFO servers, faults, in-cluster PSTS
+triggers). The federation advances them in lockstep epochs of
+``exchange_period``: step every member to the epoch boundary, then run the
+top-level positional balancer (``balancer.choose_destination``) over
+cluster-level loads/powers and move admitted queued tasks through the link
+model. A moved task is withdrawn from its source queue and lands at the
+destination ``latency + packets / bandwidth`` later, placed by the
+destination's own policy — exactly the semantics of an in-cluster migration,
+with WAN constants.
+
+Conservation is checked every epoch (scheduled = completed + queued +
+running + in flight, across all members and the WAN) and at the end (all
+tasks done, moved work sent equals work landed), so a federation bug cannot
+silently duplicate or leak tasks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..runtime.metrics import Metrics
+from ..runtime.runtime import ClusterRuntime
+from .balancer import ExchangeStats, admit, choose_destination
+from .specs import Federation
+
+__all__ = ["FederatedRuntime", "FederationReport", "aggregate_metrics"]
+
+_TINY = 1e-9
+
+
+def aggregate_metrics(members: list[Metrics]) -> Metrics:
+    """One Metrics over every member: counters sum, makespan is the max,
+    response/wait distributions concatenate (so mean/P99 are exact over the
+    federation, not averages of member averages)."""
+    agg = Metrics()
+    for m in members:
+        agg.arrived += m.arrived
+        agg.completed += m.completed
+        agg.migrations += m.migrations
+        agg.moved_packets += m.moved_packets
+        agg.moved_units += m.moved_units
+        agg.trigger_evals += m.trigger_evals
+        agg.trigger_fires += m.trigger_fires
+        agg.restarts += m.restarts
+        agg.failures += m.failures
+        agg.joins += m.joins
+        agg.makespan = max(agg.makespan, m.makespan)
+        agg.responses.extend(m.responses)
+        agg.waits.extend(m.waits)
+    return agg
+
+
+@dataclass
+class FederationReport:
+    """What one federated run produced."""
+
+    aggregate: Metrics
+    members: list[Metrics]
+    wan: ExchangeStats
+    epochs: int
+
+
+class FederatedRuntime:
+    """N member ClusterRuntimes in lockstep, exchanging work over WAN links."""
+
+    def __init__(self, federation: Federation):
+        self.federation = federation
+        n = federation.n_members
+        self.links = {(lk.src, lk.dst): lk
+                      for lk in federation.topology.resolve(n)}
+        self.runtimes: list[ClusterRuntime] = []
+        self._scheduled = 0
+        for member in federation.members:
+            rt = ClusterRuntime(
+                member.cluster.resolve_powers(), member.policy.name,
+                d=member.cluster.d,
+                trigger_period=member.policy.trigger_period,
+                bandwidth=member.cluster.bandwidth,
+                seed=member.engine_seed,
+                policy_kwargs=dict(member.policy.params))
+            wl = member.workload.materialize(member.seed)
+            rt.schedule_workload(wl, failures=member.faults.failures,
+                                 joins=member.faults.joins,
+                                 tid_base=self._scheduled)
+            self._scheduled += wl.m
+            self.runtimes.append(rt)
+        self.stats = ExchangeStats()
+        # (t_land, dst, work) for WAN transfers not yet landed — counted
+        # into the destination's effective load so an epoch cannot oversend
+        self._wan_inflight: list[tuple[float, int, float]] = []
+        # tid -> work for every task that ever crossed the WAN (a task
+        # relayed twice appears once: conservation is about existence)
+        self._sent: dict[int, float] = {}
+
+    # -- balancing ----------------------------------------------------------
+    def _exchange(self, t: float) -> None:
+        """One top-level balancing pass at epoch boundary ``t``."""
+        n = len(self.runtimes)
+        self._wan_inflight = [(tl, d, w) for tl, d, w in self._wan_inflight
+                              if tl > t]
+        loads = np.array([rt.loads(t).sum() for rt in self.runtimes])
+        for _, dst, work in self._wan_inflight:
+            loads[dst] += work
+        powers = np.array([rt.grid.total_power for rt in self.runtimes])
+        total_power = powers.sum()
+        if total_power <= 0:
+            return
+        fair = powers / total_power * loads.sum()
+        # most-overloaded sources first, so the worst hotspot gets first
+        # claim on the reachable deficit
+        order = np.argsort(-(loads - fair))
+        for src in map(int, order):
+            surplus = loads[src] - fair[src]
+            if surplus <= _TINY:
+                break
+            reachable = np.zeros(n, dtype=bool)
+            for dst in range(n):
+                if (src, dst) in self.links:
+                    reachable[dst] = True
+            if not reachable.any():
+                continue
+            rt = self.runtimes[src]
+            # withdraw from the back of the FIFO order: the tasks that would
+            # wait longest locally lose the least by travelling
+            for task in reversed(rt.queued_tasks()):
+                if surplus <= _TINY:
+                    break
+                dst = choose_destination(loads, powers, reachable, task.work)
+                if dst < 0:
+                    break
+                link = self.links[(src, dst)]
+                delay = link.delay(task.packets)
+                if not admit(loads[src], powers[src], loads[dst],
+                             powers[dst], task.work, delay,
+                             self.federation.admission_margin):
+                    self.stats.rejected += 1
+                    continue
+                rt.withdraw(task)
+                task.migrations += 1
+                t_land = t + delay
+                self.runtimes[dst].inject(task, t_land)
+                self._wan_inflight.append((t_land, dst, task.work))
+                self._sent[task.tid] = task.work
+                self.stats.migrations += 1
+                self.stats.moved_units += task.work
+                self.stats.moved_packets += task.packets
+                loads[src] -= task.work
+                loads[dst] += task.work
+                surplus -= task.work
+
+    # -- invariants ---------------------------------------------------------
+    def _check_conservation(self, where: str) -> None:
+        completed = sum(rt.metrics.completed for rt in self.runtimes)
+        live = 0
+        for rt in self.runtimes:
+            c = rt.census()
+            # in-flight tasks each hold a pending MIGRATION_ARRIVE event, so
+            # pending_migrations alone covers local and WAN hand-offs
+            live += (c["queued"] + c["running"] + c["pending_arrivals"]
+                     + c["pending_migrations"])
+        if completed + live != self._scheduled:
+            raise RuntimeError(
+                f"conservation violated {where}: scheduled="
+                f"{self._scheduled} but completed={completed} + live={live}")
+
+    # -- driver -------------------------------------------------------------
+    def run(self, *, max_epochs: int = 200_000) -> FederationReport:
+        period = self.federation.exchange_period
+        t, epochs = 0.0, 0
+        while any(rt.pending_work() for rt in self.runtimes):
+            epochs += 1
+            if epochs > max_epochs:
+                raise RuntimeError(f"epoch budget exhausted ({max_epochs})")
+            t += period
+            for rt in self.runtimes:
+                rt.step_until(t)
+            if self.links:
+                self._exchange(t)
+                self.stats.epochs += 1
+            self._check_conservation(f"at epoch t={t}")
+        self._finalize()
+        members = [rt.metrics for rt in self.runtimes]
+        return FederationReport(aggregate=aggregate_metrics(members),
+                                members=members, wan=self.stats,
+                                epochs=epochs)
+
+    def _finalize(self) -> None:
+        completed = sum(rt.metrics.completed for rt in self.runtimes)
+        if completed != self._scheduled:
+            raise RuntimeError(
+                f"run ended with {completed}/{self._scheduled} tasks "
+                f"completed")
+        sent = sum(self._sent.values())
+        landed = sum(task.work
+                     for rt in self.runtimes
+                     for task in rt.tasks.values()
+                     if task.tid in self._sent)
+        if abs(landed - sent) > 1e-6 * max(sent, 1.0):
+            raise RuntimeError(
+                f"WAN work not conserved: sent {sent} units, "
+                f"{landed} landed")

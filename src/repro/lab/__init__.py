@@ -38,4 +38,17 @@ __all__ = [
     "BACKENDS", "BATCHED_POLICIES", "Backend", "BackendError", "get_backend",
     "METRIC_SCHEMA", "RunResult", "make_metrics",
     "ClusterSpec", "FaultSpec", "PolicySpec", "Scenario", "WorkloadSpec",
+    "Federation", "LinkSpec", "TopologySpec",
 ]
+
+# federation specs re-export lazily (PEP 562): repro.federation itself
+# imports repro.lab.specs, so an eager import here would deadlock whichever
+# package is imported first. By first attribute access both sides are done.
+_FEDERATION_EXPORTS = ("Federation", "LinkSpec", "TopologySpec")
+
+
+def __getattr__(name):
+    if name in _FEDERATION_EXPORTS:
+        from .. import federation
+        return getattr(federation, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -25,8 +25,9 @@ BATCH_THRESHOLD = 8
 
 def run(scenario: Scenario, backend: str = "events",
         **backend_options) -> RunResult:
-    """Execute one scenario on one backend; raises ``BackendError`` with the
-    reason when the scenario is not expressible there."""
+    """Execute one scenario (or ``repro.federation.Federation``) on one
+    backend; raises ``BackendError`` with the reason when the spec is not
+    expressible there."""
     return get_backend(backend).run(scenario, **backend_options)
 
 
@@ -66,9 +67,23 @@ def sweep(scenarios: list[Scenario] | None = None, *,
         return []
 
     batched = get_backend("batched")
+    # federations (no .workload, their own backend) dispatch as a unit
+    if all(getattr(sc, "is_federation", False) for sc in scenarios):
+        if backend == "auto":
+            backend = "federated"
+        if backend == "federated" and "dt" in backend_options:
+            backend_options.pop("dt")  # slot width is batched-only
+            warnings.warn("sweep dispatched to the 'federated' backend; "
+                          "the batched-only 'dt' option is ignored",
+                          stacklevel=2)
+        chosen = get_backend(backend)
+        for sc in scenarios:  # fail fast, before any federation has run
+            chosen.check(sc)
+        return [chosen.run(sc, **backend_options) for sc in scenarios]
     # a seed axis over one trace file replays identical workloads — flag it
     # regardless of backend (the trace ignores the seed entirely)
     if (len(scenarios) > 1
+            and all(hasattr(sc, "workload") for sc in scenarios)
             and len({sc.workload.trace_path for sc in scenarios}) == 1
             and scenarios[0].workload.trace_path is not None
             and len({sc.seed for sc in scenarios}) > 1):

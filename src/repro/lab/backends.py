@@ -85,6 +85,10 @@ def register_backend(cls: type[Backend]) -> type[Backend]:
 
 
 def get_backend(name: str) -> Backend:
+    if name == "federated" and name not in BACKENDS:
+        # registration lives in repro.federation, which imports this module;
+        # importing it eagerly at module top would be a cycle
+        from ..federation import backend as _federation_backend  # noqa: F401
     if name not in BACKENDS:
         raise ValueError(f"unknown backend {name!r}; have {sorted(BACKENDS)}")
     return BACKENDS[name]
@@ -105,6 +109,15 @@ def uniform_but_for_seed(scenarios: list[Scenario]) -> bool:
         return json.dumps(d, sort_keys=True)
     first = key(scenarios[0])
     return all(key(sc) == first for sc in scenarios[1:])
+
+
+def _single_cluster_only(spec) -> str | None:
+    """Federations (duck-typed on ``is_federation`` to avoid an import
+    cycle with ``repro.federation``) only run on the federated backend."""
+    if getattr(spec, "is_federation", False):
+        return ("a Federation composes member Scenarios; run it on the "
+                "'federated' backend")
+    return None
 
 
 def _unknown_policy_params(scenario: Scenario) -> str | None:
@@ -152,6 +165,9 @@ class EventsBackend(Backend):
 
     def eligible(self, scenario):
         from ..runtime.policies import make_policy
+        bad = _single_cluster_only(scenario)
+        if bad is not None:
+            return bad
         try:  # unknown names AND param/constructor mismatches, one reason
             make_policy(scenario.policy.name, **dict(scenario.policy.params))
         except (TypeError, ValueError) as exc:
@@ -195,6 +211,9 @@ class BatchedBackend(Backend):
     default_dt = 1.0
 
     def eligible(self, scenario):
+        bad = _single_cluster_only(scenario)
+        if bad is not None:
+            return bad
         if scenario.policy.name not in BATCHED_POLICIES:
             return (f"policy {scenario.policy.name!r} needs per-task state; "
                     f"the batched backend supports positional policies only "
@@ -355,6 +374,9 @@ class LegacyBackend(Backend):
     name = "legacy"
 
     def eligible(self, scenario):
+        bad = _single_cluster_only(scenario)
+        if bad is not None:
+            return bad
         if not scenario.faults.empty:
             return ("the static paper simulator has no timeline; declare "
                     "faults on the events or batched backend")

@@ -19,6 +19,7 @@ import json
 import sys
 from pathlib import Path
 
+from ..federation import Federation, TopologySpec
 from .api import BATCH_THRESHOLD, expand_grid, run, sweep
 from .backends import BACKENDS
 from .specs import (
@@ -68,10 +69,32 @@ def _preset_paper_static() -> Scenario:
     )
 
 
+def _preset_geo_federation() -> Federation:
+    """Four geo-distributed clusters, one overloaded: the shape WAN work
+    exchange exists for."""
+    rates = [12.0, 2.0, 2.0, 2.0]
+    members = tuple(
+        Scenario(
+            name=f"dc{i}",
+            cluster=ClusterSpec(n_nodes=8, power_seed=i, bandwidth=256.0),
+            workload=WorkloadSpec(process="poisson", horizon=100.0,
+                                  work_mean=6.0, params={"rate": rate}),
+            policy=PolicySpec(name="psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+            seed=i)
+        for i, rate in enumerate(rates))
+    return Federation(
+        name="geo-federation",
+        members=members,
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+
+
 PRESETS = {
     "basic": _preset_basic,
     "bursty-failover": _preset_bursty_failover,
     "paper-static": _preset_paper_static,
+    "geo-federation": _preset_geo_federation,
 }
 
 
@@ -104,8 +127,13 @@ def _parse_grid(specs: list[str]) -> dict:
     return grid
 
 
-def _load_scenario(path: str) -> Scenario:
-    return Scenario.from_json(Path(path).read_text())
+def _load_scenario(path: str) -> Scenario | Federation:
+    """A spec file with a ``members`` section is a Federation; anything
+    else is a single-cluster Scenario."""
+    d = json.loads(Path(path).read_text())
+    if "members" in d:
+        return Federation.from_dict(d)
+    return Scenario.from_dict(d)
 
 
 def _emit(results, out: str | None) -> None:
@@ -141,10 +169,11 @@ def main(argv: list[str] | None = None) -> int:
     p_tpl = sub.add_parser("template", help="print a scenario JSON to edit")
     p_tpl.add_argument("--preset", choices=sorted(PRESETS), default="basic")
 
-    p_run = sub.add_parser("run", help="run one scenario file")
+    p_run = sub.add_parser("run", help="run one scenario/federation file")
     p_run.add_argument("scenario")
-    p_run.add_argument("--backend", default="events",
-                       choices=sorted(BACKENDS))
+    p_run.add_argument("--backend", default=None, choices=sorted(BACKENDS),
+                       help="default: events for a Scenario, federated for "
+                            "a Federation")
     p_run.add_argument("--dt", type=float, default=None,
                        help="slot width (batched backend only)")
     p_run.add_argument("--out", default=None, help="write result JSON here")
@@ -180,6 +209,10 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     if args.cmd == "run":
+        if args.backend is None:
+            args.backend = ("federated"
+                            if getattr(scenario, "is_federation", False)
+                            else "events")
         if args.dt is not None and args.backend != "batched":
             raise SystemExit(f"--dt sets the batched backend's slot width; "
                              f"it does nothing on {args.backend!r}")

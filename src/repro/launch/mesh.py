@@ -11,7 +11,6 @@ the mesh itself (runbook in README)."""
 
 from __future__ import annotations
 
-import math
 
 import jax
 

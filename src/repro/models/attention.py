@@ -147,8 +147,8 @@ def chunked_attention(q, k, v, *, q_positions, kv_positions, window=None,
     m0 = jnp.full((b, h, s), _NEG, jnp.float32)
     l0 = jnp.zeros((b, h, s), jnp.float32)
     acc0 = jnp.zeros((b, h, s, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lsum, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     out = out.transpose(0, 2, 1, 3)            # (B,S,H,hd)
     return out.astype(q.dtype)
 

@@ -413,7 +413,6 @@ class LM:
 
         tokens: (B, S); lengths: (B,) real lengths (<= S <= cache max_len).
         Returns (last-token logits (B, V), new_cache)."""
-        cfg = self.cfg
         b, s = tokens.shape
         pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         mask = pos < lengths[:, None]

@@ -46,7 +46,9 @@ class AdamW:
     min_decay_ndim: int = 2
 
     def init(self, params) -> AdamWState:
-        zeros = lambda p: jnp.zeros(p.shape, self.moments_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, self.moments_dtype)
+
         return AdamWState(
             step=jnp.zeros((), jnp.int32),
             m=jax.tree.map(zeros, params),

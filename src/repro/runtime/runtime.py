@@ -112,6 +112,25 @@ class ClusterRuntime:
         running = sum(r is not None for r in self._running)
         return queued + running + len(self._in_flight)
 
+    def census(self) -> dict:
+        """Where every live task is right now — the quantity conservation
+        checks (federation, tests) audit against arrivals/completions."""
+        return {
+            "queued": sum(len(q) for q in self._queues),
+            "running": sum(r is not None for r in self._running),
+            "in_flight": len(self._in_flight),
+            "pending_arrivals": self._eq.pending(EventKind.ARRIVAL),
+            "pending_migrations": self._eq.pending(
+                EventKind.MIGRATION_ARRIVE),
+        }
+
+    def pending_work(self) -> bool:
+        """True while any task is live here or scheduled to become live
+        (arrivals, migrations or completions still in the event queue)."""
+        return bool(self._outstanding() or self._eq.pending(
+            EventKind.ARRIVAL, EventKind.MIGRATION_ARRIVE,
+            EventKind.COMPLETION))
+
     # -- mechanics ----------------------------------------------------------
     def _place(self, task: Task, t: float) -> None:
         """Ask the policy for a node; fall back to the least-loaded active
@@ -204,8 +223,10 @@ class ClusterRuntime:
 
     def _on_migration_arrive(self, task: Task, dst: int, t: float) -> None:
         self._in_flight.discard(task.tid)
-        if not self.grid.active[dst]:
-            self._place(task, t)  # destination died while in flight
+        if dst < 0 or not self.grid.active[dst]:
+            # dst < 0: an injected federation hand-off, placed by the local
+            # policy on landing; otherwise the destination died in flight
+            self._place(task, t)
             return
         task.node = dst
         task.placements.append((t, dst))
@@ -261,24 +282,88 @@ class ClusterRuntime:
                 EventKind.COMPLETION):
             self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
 
+    # -- federation hand-off ------------------------------------------------
+    def queued_tasks(self) -> list[Task]:
+        """Snapshot of queued (not running, not in-flight) tasks in node
+        order — the set a federation balancer may withdraw."""
+        return [task for q in self._queues for task in q]
+
+    def withdraw(self, task: Task) -> None:
+        """Remove a queued task for an external hand-off (WAN migration).
+        The task stops existing here; inject it elsewhere to conserve it."""
+        if task.node < 0 or task not in self._queues[task.node]:
+            raise ValueError(f"task {task.tid} is not queued here")
+        self._queues[task.node].remove(task)
+        self.tasks.pop(task.tid, None)
+        task.node = -1
+
+    def inject(self, task: Task, t: float) -> None:
+        """Deliver a task arriving from outside (a federation hand-off) at
+        time ``t``; the local policy places it on landing. Does not count as
+        a local arrival — the source cluster already observed it."""
+        self.tasks[task.tid] = task
+        task.node = -1
+        self._eq.push(t, EventKind.MIGRATION_ARRIVE, (task, -1))
+        # revive the trigger chain: an idle member stops re-arming, but
+        # injected work must still be eligible for rebalancing
+        if (self.policy.uses_trigger and self.trigger_period > 0
+                and not self._eq.pending(EventKind.TRIGGER_EVAL)):
+            self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
+
     # -- driver -------------------------------------------------------------
-    def run(self, workload: Workload, *, failures=(), joins=(),
-            horizon: float | None = None, max_events: int = 2_000_000
-            ) -> Metrics:
-        """Run to completion (or ``horizon``). ``failures``/``joins`` are
-        ``(time, node)`` sequences."""
+    def schedule_workload(self, workload: Workload, *, failures=(),
+                          joins=(), tid_base: int = 0) -> None:
+        """Queue a workload's arrivals and fault events. ``tid_base``
+        offsets task ids so several workloads (federation members) share one
+        global id space."""
         for i in range(workload.m):
             self._eq.push(workload.t_arrive[i], EventKind.ARRIVAL,
-                          Task(tid=i, t_arrive=float(workload.t_arrive[i]),
+                          Task(tid=tid_base + i,
+                               t_arrive=float(workload.t_arrive[i]),
                                work=float(workload.works[i]),
                                packets=float(workload.packets[i])))
         for t, node in failures:
             self._eq.push(t, EventKind.NODE_FAIL, int(node))
         for t, node in joins:
             self._eq.push(t, EventKind.NODE_JOIN, int(node))
-        if self.policy.uses_trigger and self.trigger_period > 0:
+        if (self.policy.uses_trigger and self.trigger_period > 0
+                and not self._eq.pending(EventKind.TRIGGER_EVAL)):
             self._eq.push(self.trigger_period, EventKind.TRIGGER_EVAL)
 
+    def _dispatch(self, ev) -> None:
+        if ev.kind == EventKind.ARRIVAL:
+            self._on_arrival(ev.payload, ev.time)
+        elif ev.kind == EventKind.COMPLETION:
+            self._on_completion(*ev.payload, ev.time)
+        elif ev.kind == EventKind.MIGRATION_ARRIVE:
+            self._on_migration_arrive(*ev.payload, ev.time)
+        elif ev.kind == EventKind.NODE_FAIL:
+            self._on_fail(ev.payload, ev.time)
+        elif ev.kind == EventKind.NODE_JOIN:
+            self._on_join(ev.payload, ev.time)
+        elif ev.kind == EventKind.TRIGGER_EVAL:
+            self._on_trigger_eval(ev.time)
+
+    def step_until(self, t: float, *, max_events: int = 2_000_000) -> int:
+        """Process every event at time <= ``t`` (the lockstep primitive the
+        federation layer drives members with); returns the event count."""
+        n_events = 0
+        while self._eq and self._eq.peek_time() <= t:
+            n_events += 1
+            if n_events > max_events:
+                raise RuntimeError(f"event budget exhausted ({max_events})")
+            ev = self._eq.pop()
+            self._now = ev.time
+            self._dispatch(ev)
+        self._now = max(self._now, t)
+        return n_events
+
+    def run(self, workload: Workload, *, failures=(), joins=(),
+            horizon: float | None = None, max_events: int = 2_000_000
+            ) -> Metrics:
+        """Run to completion (or ``horizon``). ``failures``/``joins`` are
+        ``(time, node)`` sequences."""
+        self.schedule_workload(workload, failures=failures, joins=joins)
         n_events = 0
         while self._eq:
             n_events += 1
@@ -288,18 +373,7 @@ class ClusterRuntime:
             if horizon is not None and ev.time > horizon:
                 break
             self._now = ev.time
-            if ev.kind == EventKind.ARRIVAL:
-                self._on_arrival(ev.payload, ev.time)
-            elif ev.kind == EventKind.COMPLETION:
-                self._on_completion(*ev.payload, ev.time)
-            elif ev.kind == EventKind.MIGRATION_ARRIVE:
-                self._on_migration_arrive(*ev.payload, ev.time)
-            elif ev.kind == EventKind.NODE_FAIL:
-                self._on_fail(ev.payload, ev.time)
-            elif ev.kind == EventKind.NODE_JOIN:
-                self._on_join(ev.payload, ev.time)
-            elif ev.kind == EventKind.TRIGGER_EVAL:
-                self._on_trigger_eval(ev.time)
+            self._dispatch(ev)
         return self.metrics
 
 

@@ -220,7 +220,8 @@ def _simulate_batch_jax(slot, works, powers, scale, cfg: VectorConfig):
         frac = jnp.clip((S - base[:, t][:, None] + 0.5 * works)
                         / jnp.where(has, tot_t, 1.0), 0.0, 1.0 - _TINY)
         owner = jax.vmap(
-            lambda l, f: jnp.searchsorted(l, f, side="right"))(lam, frac) - 1
+            lambda lv, fv: jnp.searchsorted(lv, fv, side="right")
+        )(lam, frac) - 1
         owner = jnp.clip(owner, 0, n - 1)
         q_own = jnp.take_along_axis(queue, owner, axis=1)
         pw_own = jnp.take_along_axis(pw, owner, axis=1)

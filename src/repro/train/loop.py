@@ -22,7 +22,7 @@ from ..checkpoint.ckpt import Checkpointer, latest_step, restore
 from ..data.pipeline import Pipeline
 from ..optim.adamw import AdamW
 from ..sched.straggler import StragglerMonitor
-from .state import TrainState, init_state
+from .state import init_state
 from .step import make_train_step
 
 __all__ = ["LoopConfig", "train"]

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 
 from ..optim.adamw import AdamW, AdamWState
 

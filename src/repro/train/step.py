@@ -5,7 +5,6 @@ by the launcher."""
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -8,6 +8,8 @@ and otherwise stand-ins that skip just the property tests.
 
 import pytest
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

@@ -7,7 +7,6 @@ import pytest
 
 from repro.core import (
     CrossoverTrigger,
-    HyperGrid,
     TpuCostModel,
     crossover_imbalance,
     embed,

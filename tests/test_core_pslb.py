@@ -5,7 +5,6 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import apportion, distribute_stream, owner_of_fraction, pslb_assign
-from repro.core.scan import exclusive_scan_np
 
 
 def test_owner_of_fraction_basic():

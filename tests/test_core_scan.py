@@ -1,9 +1,7 @@
 """Scan primitives: host, in-core JAX, and the cross-device ladder."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import exclusive_scan, exclusive_scan_np, inclusive_scan_np

@@ -3,7 +3,6 @@ to the paper-faithful scan lowering (same keeps, same kept positions, same
 weights) — the §Perf optimization changes traffic, never routing."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 

@@ -1,7 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
 (interpret=True executes the kernel bodies on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

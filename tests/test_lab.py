@@ -413,6 +413,40 @@ def test_load_trace_csv_sorts_and_clips():
     assert wl.works[i] == 6.0 and wl.packets[i] == 12.0
 
 
+def test_load_trace_csv_empty_file_is_an_empty_workload(tmp_path):
+    """An empty trace (or one that is all comments/blank lines) is a valid
+    zero-task workload, not a crash."""
+    import warnings as _w
+    for name, content in (("empty.csv", ""),
+                          ("comments.csv", "# header only\n\n")):
+        path = tmp_path / name
+        path.write_text(content)
+        with _w.catch_warnings():  # numpy warns on no-data loadtxt
+            _w.simplefilter("ignore")
+            wl = load_trace_csv(path)
+        assert wl.m == 0 and wl.horizon == 0.0, name
+    # and an empty trace flows through the events backend as a no-op run
+    sc = _scenario(workload=lab.WorkloadSpec(
+        trace_path=str(tmp_path / "empty.csv"), horizon=None))
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")
+        r = lab.run(sc, backend="events")
+    assert r["arrived"] == 0 and r["completed"] == 0
+    assert json.loads(r.to_json())["metrics"]["mean_response"] is None
+
+
+def test_load_trace_csv_single_row_and_unsorted(tmp_path):
+    one = tmp_path / "one.csv"
+    one.write_text("3.0,2.0,4.0\n")  # 1-D without ndmin=2
+    wl = load_trace_csv(one)
+    assert wl.m == 1 and wl.works[0] == 2.0
+    rev = tmp_path / "rev.csv"
+    rev.write_text("9.0,1.0,1.0\n5.0,2.0,2.0\n7.0,3.0,3.0\n")
+    wl = load_trace_csv(rev)
+    assert list(wl.t_arrive) == [5.0, 7.0, 9.0]
+    assert list(wl.works) == [2.0, 3.0, 1.0]  # rows follow the sort
+
+
 def test_load_trace_csv_rejects_bad_shapes(tmp_path):
     bad = tmp_path / "bad.csv"
     bad.write_text("1.0,2.0\n")

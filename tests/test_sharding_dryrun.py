@@ -5,12 +5,10 @@ main pytest process keeps a single CPU device (the production 512-device
 sweep is exercised by launch/dryrun.py itself; here we validate the same
 code paths at 4x2)."""
 
-import json
 import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow  # subprocess model compiles; tier-1 fast subset skips

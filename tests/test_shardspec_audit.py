@@ -3,7 +3,6 @@ parameter / moment / cache spec must divide its dimension evenly — the
 failure mode that would otherwise only surface deep inside the 512-device
 sweep. Pure shape logic (eval_shape; no devices, no allocation)."""
 
-import dataclasses
 from types import SimpleNamespace
 
 import jax

@@ -1,20 +1,19 @@
 """End-to-end training integration: loop runs, loss decreases, checkpoint/
 restart resumes identically, SIGTERM-style stop saves state."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore
+from repro.checkpoint import latest_step
 from repro.configs import REGISTRY
 from repro.data import DocStream, Pipeline
 from repro.models import LM
 from repro.optim import AdamW, warmup_cosine
 from repro.sched.straggler import StragglerMonitor
-from repro.train import LoopConfig, TrainState, init_state, make_train_step, train
+from repro.train import LoopConfig, init_state, make_train_step, train
 
 pytestmark = pytest.mark.slow  # model compiles; tier-1 fast subset skips
 
