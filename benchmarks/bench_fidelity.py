@@ -1,0 +1,74 @@
+"""Vector-backend fidelity: the events-vs-batched gap, policy by policy.
+
+The fluid slotted backend matches its scalar reference to float tolerance
+(bench_runtime asserts that), but it differs from the discrete event
+engine *by design* — no head-of-line blocking, slot-quantized arrivals,
+instant migration. ROADMAP asks to quantify that modelling gap policy by
+policy; the shared ``lab.Scenario`` + same-schema ``RunResult`` make the
+comparison a one-liner per scenario.
+
+Each record runs the identical Scenario on both backends (8-seed mean)
+and reports the relative gap on mean response and makespan. The gap is a
+*model* difference, not an error — it gates nothing directly, but the
+committed trajectory shows when an engine change moves the two models
+apart.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import lab
+
+N_NODES = 16
+POWERS = tuple(
+    np.random.default_rng(0).integers(1, 10, size=N_NODES).astype(float))
+SEEDS = range(8)
+
+SCENARIOS = {
+    "poisson": {"process": "poisson", "params": {"rate": 8.0}},
+    "bursty": {"process": "bursty",
+               "params": {"rate_lo": 0.5, "rate_hi": 18.0,
+                          "sojourn_lo": 25.0, "sojourn_hi": 6.0}},
+}
+
+
+def _base(process: str, policy: str) -> lab.Scenario:
+    spec = SCENARIOS[process]
+    return lab.Scenario(
+        name=f"fidelity/{process}/{policy}",
+        cluster=lab.ClusterSpec(powers=POWERS, bandwidth=256.0),
+        workload=lab.WorkloadSpec(process=spec["process"], horizon=200.0,
+                                  work_mean=6.0, params=spec["params"]),
+        policy=lab.PolicySpec(policy, trigger_period=1.0,
+                              params={"floor": 0.05}
+                              if policy == "psts" else {}),
+    )
+
+
+def fidelity_grid() -> list[tuple[str, float, str]]:
+    rows = []
+    for process in SCENARIOS:
+        for policy in lab.BATCHED_POLICIES:
+            scenarios = lab.expand_grid(_base(process, policy),
+                                        {"seed": SEEDS})
+            t0 = time.perf_counter()
+            ev = lab.sweep(scenarios, backend="events")
+            batched = lab.sweep(scenarios, backend="batched")
+            us = (time.perf_counter() - t0) * 1e6
+            mr_ev = float(np.mean([r["mean_response"] for r in ev]))
+            mr_b = float(np.mean([r["mean_response"] for r in batched]))
+            mk_ev = float(np.mean([r["makespan"] for r in ev]))
+            mk_b = float(np.mean([r["makespan"] for r in batched]))
+            rows.append((
+                f"fidelity/{process}/{policy}", us / len(scenarios),
+                f"mean_resp_events={mr_ev:.3f};"
+                f"mean_resp_batched={mr_b:.3f};"
+                f"gap_resp_pct={(mr_b - mr_ev) / mr_ev * 100.0:.1f};"
+                f"gap_makespan_pct={(mk_b - mk_ev) / mk_ev * 100.0:.1f}"))
+    return rows
+
+
+ALL = [fidelity_grid]

@@ -1,0 +1,99 @@
+"""Regenerate the bundled trace excerpt (``google_excerpt_10k.csv.gz`` +
+``google_excerpt_10k_constraints.csv.gz``).
+
+A committed, deterministic 10k-task excerpt in the Google cluster-data v2
+task-events format, shaped like the public trace where it matters for the
+scheduling benchmarks:
+
+* bursty arrivals (2-state MMPP: long low-rate sojourns, short heavy
+  bursts) — the regime where rebalancing pays,
+* a priority mix over Google's native scale (production 9, mid 4-8,
+  gratis 0-1; ~35/45/20%) mapping onto dense tiers with tier 0 =
+  production,
+* production (tier-0) tasks constrained ``machine_class >= 2`` via a
+  companion task_constraints table — the placement-constraint dimension,
+* per-task SUBMIT/SCHEDULE/FINISH event rows, shard-shuffled so parsers
+  must cope with out-of-order rows.
+
+Run from the repo root::
+
+    PYTHONPATH=src python benchmarks/data/make_excerpt.py
+"""
+
+from __future__ import annotations
+
+import gzip
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+N_TASKS = 10_000
+SEED = 20260726
+
+
+def generate(rng: np.random.Generator):
+    # MMPP-2 arrivals over ~2000 simulated seconds (microsecond stamps)
+    horizon_s = 2000.0
+    times = []
+    t, hi = 0.0, False
+    while t < horizon_s and len(times) < N_TASKS * 2:
+        sojourn = rng.exponential(4.0 if hi else 22.0)
+        end = min(t + sojourn, horizon_s)
+        rate = 22.0 if hi else 1.5
+        k = rng.poisson(rate * (end - t))
+        times.extend(rng.uniform(t, end, size=k).tolist())
+        t, hi = end, not hi
+    times = np.sort(np.asarray(times))[:N_TASKS]
+    m = times.shape[0]
+
+    # priority mix: 35% production (9), 45% mid (4..8), 20% gratis (0..1)
+    u = rng.uniform(size=m)
+    pri = np.where(u < 0.35, 9,
+                   np.where(u < 0.8, rng.integers(4, 9, size=m),
+                            rng.integers(0, 2, size=m)))
+    cpu = np.round(rng.uniform(0.1, 1.0, size=m), 3)
+    mem = np.round(rng.uniform(0.05, 0.5, size=m), 3)
+    # service durations: lognormal seconds, mildly tier-correlated
+    dur = rng.lognormal(mean=1.3, sigma=0.6, size=m) * (1.0 + 0.3 * (pri < 4))
+    job = 6_000_000 + rng.permutation(m)
+    return times, job, pri, cpu, mem, dur
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    times, job, pri, cpu, mem, dur = generate(rng)
+    m = times.shape[0]
+    rows = []
+    for i in range(m):
+        t0 = int(times[i] * 1e6)
+        t1 = t0 + int(rng.uniform(0.05, 0.5) * 1e6)      # queue -> schedule
+        t2 = t1 + int(dur[i] * 1e6)                       # schedule -> finish
+        common = f"{job[i]},0,,{{ev}},user,0,{pri[i]},{cpu[i]},{mem[i]},"
+        rows.append(f"{t0},,{common.format(ev=0)}")
+        rows.append(f"{t1},,{common.format(ev=1)}")
+        rows.append(f"{t2},,{common.format(ev=4)}")
+    # shard-shuffle: rows arrive interleaved, not time-sorted
+    order = rng.permutation(len(rows))
+
+    def write_gz(name: str, text: str) -> None:
+        # mtime=0 keeps the archive byte-identical across regenerations
+        with open(os.path.join(HERE, name), "wb") as raw:
+            with gzip.GzipFile(fileobj=raw, mode="wb", compresslevel=9,
+                               mtime=0) as fh:
+                fh.write(text.encode())
+
+    write_gz("google_excerpt_10k.csv.gz",
+             "\n".join(rows[i] for i in order) + "\n")
+
+    # production tasks require machine_class >= 2 (google op 3 is '>',
+    # so spell >= 2 as > 1)
+    con = [f"{int(times[i] * 1e6)},{job[i]},0,3,machine_class,1"
+           for i in range(m) if pri[i] >= 9]
+    write_gz("google_excerpt_10k_constraints.csv.gz", "\n".join(con) + "\n")
+    print(f"wrote {m} tasks ({len(rows)} event rows, {len(con)} "
+          f"constraint rows)")
+
+
+if __name__ == "__main__":
+    main()

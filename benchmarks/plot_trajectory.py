@@ -1,0 +1,164 @@
+"""Render the committed ``BENCH_*.json`` trajectory as per-metric plots.
+
+The committed benchmark artifacts form a series over PRs (ROADMAP: "plot
+the trajectory across PRs"). This script loads every baseline matching
+``--glob`` in the same natural-sort order ``compare.py`` gates against,
+and renders one figure per suite: a small-multiple panel per key quality
+metric (the same metric set ``compare.py`` enforces), one line per
+benchmark record, color following the record across panels.
+
+Raw ``us_per_call`` timings are only plotted with ``--include-timing`` —
+on shared runners they are noise, exactly as in the gate.
+
+Usage (CI uploads the output directory as an artifact)::
+
+    PYTHONPATH=src python benchmarks/plot_trajectory.py \
+        --glob 'BENCH_*.json' --out-dir bench-plots
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob as globlib
+import json
+import os
+import sys
+
+try:  # `python -m benchmarks.plot_trajectory` or direct script run
+    from benchmarks.compare import _direction, _natural_key
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from compare import _direction, _natural_key
+
+# fixed categorical order (validated placeholder palette; see the dataviz
+# design notes) — assigned to records in sorted order, never cycled: a 9th
+# record folds into the muted "other" treatment below
+PALETTE = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100",
+           "#e87ba4", "#008300", "#4a3aa7", "#e34948")
+OTHER = "#9a9a92"
+INK = "#333330"
+MUTED_INK = "#73726c"
+GRID = "#e8e8e4"
+
+
+def load_series(paths: list[str], include_timing: bool):
+    """{suite: {metric: {record_name: [value-or-None per path]}}}."""
+    suites: dict[str, dict[str, dict[str, list]]] = {}
+    for k, path in enumerate(paths):
+        with open(path) as fh:
+            records = json.load(fh)
+        for r in records:
+            derived = dict(r.get("derived", {}))
+            if include_timing:
+                derived["us_per_call"] = r.get("us_per_call")
+            for metric, value in derived.items():
+                if _direction(metric) == 0:
+                    continue  # not a gated quality metric
+                if metric == "us_per_call" and not include_timing:
+                    continue
+                if not isinstance(value, (int, float)) \
+                        or isinstance(value, bool):
+                    continue
+                (suites.setdefault(r["suite"], {})
+                       .setdefault(metric, {})
+                       .setdefault(r["name"], [None] * len(paths))
+                 )[k] = float(value)
+    return suites
+
+
+def plot_suite(suite: str, metrics: dict, labels: list[str], out_dir: str,
+               plt) -> str:
+    names = sorted({name for series in metrics.values() for name in series})
+    color = {name: (PALETTE[i] if i < len(PALETTE) else OTHER)
+             for i, name in enumerate(names)}
+    n = len(metrics)
+    cols = min(n, 3)
+    rows_n = (n + cols - 1) // cols
+    fig, axes = plt.subplots(rows_n, cols,
+                             figsize=(4.6 * cols, 3.2 * rows_n),
+                             squeeze=False)
+    fig.patch.set_facecolor("white")
+    x = range(len(labels))
+    for ax_i, (metric, series) in enumerate(sorted(metrics.items())):
+        ax = axes[ax_i // cols][ax_i % cols]
+        for name in sorted(series):
+            ys = series[name]
+            ax.plot(x, [float("nan") if v is None else v for v in ys],
+                    color=color[name], linewidth=2, marker="o",
+                    markersize=4, label=name)
+        arrow = "↓" if _direction(metric) > 0 else "↑"
+        ax.set_title(f"{metric} ({arrow} better)", fontsize=10,
+                     color=INK, loc="left")
+        ax.set_xticks(list(x))
+        ax.set_xticklabels(labels, rotation=30, ha="right", fontsize=8,
+                           color=MUTED_INK)
+        ax.tick_params(axis="y", labelsize=8, colors=MUTED_INK)
+        ax.grid(axis="y", color=GRID, linewidth=0.8)
+        ax.set_axisbelow(True)
+        for spine in ("top", "right"):
+            ax.spines[spine].set_visible(False)
+        for spine in ("left", "bottom"):
+            ax.spines[spine].set_color(GRID)
+    for ax_i in range(n, rows_n * cols):
+        axes[ax_i // cols][ax_i % cols].set_visible(False)
+    # one legend per figure: identity is shared across panels; records
+    # beyond the fixed palette fold into one muted "other" entry
+    named = names[:len(PALETTE)]
+    handles = [plt.Line2D([], [], color=color[nm], linewidth=2,
+                          marker="o", markersize=4, label=nm)
+               for nm in named]
+    if len(names) > len(named):
+        handles.append(plt.Line2D(
+            [], [], color=OTHER, linewidth=2, marker="o", markersize=4,
+            label=f"(+{len(names) - len(named)} more)"))
+    ncol = max(1, min(len(handles), cols, 3))
+    fig.legend(handles=handles, loc="lower center", ncol=ncol,
+               fontsize=8, frameon=False, labelcolor=MUTED_INK)
+    fig.suptitle(f"{suite} — benchmark trajectory", fontsize=12,
+                 color=INK, x=0.02, ha="left")
+    legend_rows = (len(handles) + ncol - 1) // ncol
+    fig.tight_layout(rect=(0, min(0.04 + 0.05 * legend_rows, 0.4),
+                           1, 0.96))
+    out = os.path.join(out_dir, f"trajectory_{suite}.png")
+    fig.savefig(out, dpi=120)
+    plt.close(fig)
+    return out
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(
+        description="plot the committed BENCH_*.json trajectory, one "
+                    "figure per suite")
+    parser.add_argument("--glob", default="BENCH_*.json",
+                        help="baseline files (natural-sorted, same order "
+                             "as compare.py)")
+    parser.add_argument("--out-dir", default="bench-plots")
+    parser.add_argument("--include-timing", action="store_true",
+                        help="also plot raw us_per_call (noisy on shared "
+                             "runners)")
+    args = parser.parse_args()
+
+    paths = sorted(globlib.glob(args.glob), key=_natural_key)
+    if not paths:
+        print(f"no baselines match {args.glob!r}", file=sys.stderr)
+        return 1
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib unavailable; skipping trajectory plots",
+              file=sys.stderr)
+        return 0
+    labels = [os.path.splitext(os.path.basename(p))[0]
+              .removeprefix("BENCH_") for p in paths]
+    suites = load_series(paths, args.include_timing)
+    os.makedirs(args.out_dir, exist_ok=True)
+    for suite, metrics in sorted(suites.items()):
+        out = plot_suite(suite, metrics, labels, args.out_dir, plt)
+        print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,16 @@ def _suites():
         suites.append(("federation", bench_federation.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_traces
+        suites.append(("traces", bench_traces.ALL))
+    except ImportError:
+        pass
+    try:
+        from . import bench_fidelity
+        suites.append(("fidelity", bench_fidelity.ALL))
+    except ImportError:
+        pass
     return suites
 
 

@@ -82,7 +82,9 @@ class FederatedRuntime:
                 trigger_period=member.policy.trigger_period,
                 bandwidth=member.cluster.bandwidth,
                 seed=member.engine_seed,
-                policy_kwargs=dict(member.policy.params))
+                policy_kwargs=dict(member.policy.params),
+                node_attrs=member.cluster.resolve_attrs(),
+                constraint_blind=member.policy.constraint_mode == "blind")
             wl = member.workload.materialize(member.seed)
             rt.schedule_workload(wl, failures=member.faults.failures,
                                  joins=member.faults.joins,
@@ -130,6 +132,11 @@ class FederatedRuntime:
             for task in reversed(rt.queued_tasks()):
                 if surplus <= _TINY:
                     break
+                if task.feasible is not None:
+                    # placement-constrained tasks are pinned to their
+                    # member: the feasibility mask is resolved against the
+                    # source cluster's attribute table and node count
+                    continue
                 dst = choose_destination(loads, powers, reachable, task.work)
                 if dst < 0:
                     break

@@ -31,13 +31,21 @@ from .backends import (
     get_backend,
 )
 from .result import METRIC_SCHEMA, RunResult, make_metrics
-from .specs import ClusterSpec, FaultSpec, PolicySpec, Scenario, WorkloadSpec
+from .specs import (
+    ClusterSpec,
+    FaultSpec,
+    PolicySpec,
+    Scenario,
+    TraceRef,
+    WorkloadSpec,
+)
 
 __all__ = [
     "BATCH_THRESHOLD", "expand_grid", "run", "sweep",
     "BACKENDS", "BATCHED_POLICIES", "Backend", "BackendError", "get_backend",
     "METRIC_SCHEMA", "RunResult", "make_metrics",
-    "ClusterSpec", "FaultSpec", "PolicySpec", "Scenario", "WorkloadSpec",
+    "ClusterSpec", "FaultSpec", "PolicySpec", "Scenario", "TraceRef",
+    "WorkloadSpec",
     "Federation", "LinkSpec", "TopologySpec",
 ]
 

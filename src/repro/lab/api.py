@@ -80,15 +80,22 @@ def sweep(scenarios: list[Scenario] | None = None, *,
         for sc in scenarios:  # fail fast, before any federation has run
             chosen.check(sc)
         return [chosen.run(sc, **backend_options) for sc in scenarios]
-    # a seed axis over one trace file replays identical workloads — flag it
-    # regardless of backend (the trace ignores the seed entirely)
+    # a seed axis over one *unscaled* trace replays identical workloads —
+    # flag it regardless of backend. A scaled trace (TraceRef(scale=N))
+    # resamples per seed, so its seed axis is a real ensemble.
+    def _replays_verbatim(sc) -> bool:
+        wl = getattr(sc, "workload", None)
+        if wl is None or not wl.is_trace:
+            return False
+        return wl.trace_path is not None or wl.trace.scale is None
     if (len(scenarios) > 1
-            and all(hasattr(sc, "workload") for sc in scenarios)
-            and len({sc.workload.trace_path for sc in scenarios}) == 1
-            and scenarios[0].workload.trace_path is not None
+            and all(_replays_verbatim(sc) for sc in scenarios)
+            and len({sc.workload.trace_files() for sc in scenarios}) == 1
             and len({sc.seed for sc in scenarios}) > 1):
         warnings.warn("trace workloads ignore the seed axis — these "
-                      "scenarios replay the identical trace", stacklevel=2)
+                      "scenarios replay the identical trace (give the "
+                      "TraceRef a scale= to resample per seed)",
+                      stacklevel=2)
     uniform = (backend in ("auto", "batched")
                and uniform_but_for_seed(scenarios))
     if backend == "auto":

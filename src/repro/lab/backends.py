@@ -144,14 +144,35 @@ def _fault_nodes_in_range(scenario: Scenario) -> str | None:
 def _trace_problem(scenario: Scenario) -> str | None:
     """A missing/unparseable trace file must be an eligibility reason, not
     a mid-run traceback after the 'backends' report said eligible."""
-    path = scenario.workload.trace_path
-    if path is None:
+    if not scenario.workload.is_trace:
         return None
-    try:
-        from ..runtime.workload import load_trace_csv
-        load_trace_csv(path)
+    label = (scenario.workload.trace_path
+             or scenario.workload.trace.path)
+    try:  # memoized: the run itself reuses this materialization
+        scenario.workload.materialize(scenario.seed)
     except Exception as exc:  # noqa: BLE001 — surface any load failure
-        return f"trace {path!r} unreadable: {exc}"
+        return f"trace {label!r} unreadable: {exc}"
+    return None
+
+
+def _constraint_problem(scenario: Scenario) -> str | None:
+    """Constrained traces must be satisfiable on this cluster: every
+    constraint attribute declared, every task with >= 1 feasible node."""
+    from ..traces import InfeasibleTaskError, TraceSchema
+    if not scenario.workload.is_trace:
+        return None
+    wl = scenario.workload.materialize(scenario.seed)
+    if not isinstance(wl, TraceSchema) or not wl.constrained:
+        return None
+    attrs = scenario.cluster.resolve_attrs()
+    names = tuple(sorted(attrs)) if attrs else ()
+    matrix = (np.stack([np.asarray(attrs[a], dtype=np.float64)
+                        for a in names], axis=1)
+              if names else np.zeros((scenario.cluster.size, 0)))
+    try:
+        wl.feasibility(names, matrix)
+    except InfeasibleTaskError as exc:
+        return str(exc)
     return None
 
 
@@ -172,10 +193,12 @@ class EventsBackend(Backend):
             make_policy(scenario.policy.name, **dict(scenario.policy.params))
         except (TypeError, ValueError) as exc:
             return str(exc)
-        return _fault_nodes_in_range(scenario) or _trace_problem(scenario)
+        return (_fault_nodes_in_range(scenario) or _trace_problem(scenario)
+                or _constraint_problem(scenario))
 
     def run(self, scenario, **options):
         from ..runtime.runtime import ClusterRuntime
+        from ..traces import TraceSchema
         self.check(scenario)
         if options:
             raise TypeError(f"events backend takes no options: "
@@ -187,17 +210,30 @@ class EventsBackend(Backend):
             trigger_period=scenario.policy.trigger_period,
             bandwidth=scenario.cluster.bandwidth,
             seed=scenario.engine_seed,
-            policy_kwargs=dict(scenario.policy.params))
+            policy_kwargs=dict(scenario.policy.params),
+            node_attrs=scenario.cluster.resolve_attrs(),
+            constraint_blind=scenario.policy.constraint_mode == "blind")
         m = rt.run(wl, failures=scenario.faults.failures,
                    joins=scenario.faults.joins)
         options = {"model": "discrete-event"}
         if scenario.workload.m_tasks is not None:
             # the realized arrival process decides the count here
             options["ignored"] = ["workload.m_tasks"]
+        extras = {}
+        if isinstance(wl, TraceSchema) and (wl.n_tiers > 1
+                                            or wl.constrained):
+            # the per-tier breakdown trace experiments compare policies
+            # on; keys are strings so the result JSON round-trips
+            extras["wait_by_tier"] = {
+                str(tier): stats for tier, stats in m.wait_by_tier().items()
+            }
+            extras["tier_counts"] = {
+                str(t): c for t, c in wl.tier_counts().items()}
         return RunResult(
             fingerprint=scenario.fingerprint(), backend=self.name,
             backend_options=options,
             metrics=make_metrics(**m.summary()),
+            extras=extras,
             scenario_name=scenario.name)
 
 
@@ -224,6 +260,14 @@ class BatchedBackend(Backend):
         bad = _fault_nodes_in_range(scenario) or _trace_problem(scenario)
         if bad is not None:
             return bad
+        if scenario.workload.is_trace:
+            from ..traces import TraceSchema
+            wl = scenario.workload.materialize(scenario.seed)
+            if isinstance(wl, TraceSchema) and wl.constrained:
+                return ("trace tasks carry placement constraints; the "
+                        "fluid model has no per-task node identity to "
+                        "enforce a feasibility mask — run on the events "
+                        "backend")
         failed_at: dict[int, float] = {}
         for t, node in sorted(scenario.faults.failures):
             failed_at.setdefault(node, t)
@@ -275,7 +319,7 @@ class BatchedBackend(Backend):
         defaults = PstsPolicy()
         cost = {k: float(pol.params.get(k, getattr(defaults, k)))
                 for k in _COST_KEYS}
-        if base.workload.trace_path is not None:
+        if base.workload.is_trace:
             # a trace carries its own packet/work ratio; the spec's
             # sampling means are never read for traces
             tot_w = sum(float(wl.works.sum()) for wl in wls)
@@ -310,7 +354,7 @@ class BatchedBackend(Backend):
             scale[s:, node] = value
         return scale
 
-    def _result(self, scenario, bm, i, cfg):
+    def _result(self, scenario, bm, i, cfg, extra_ignored=()):
         count = int(bm.completed[i])
         moved_units = float(bm.moved_units[i])
         metrics = make_metrics(
@@ -337,7 +381,8 @@ class BatchedBackend(Backend):
                 "ignored": ["policy.trigger_period", "cluster.bandwidth",
                             "cluster.d", "engine_seed"]
                 + (["workload.m_tasks"]
-                   if scenario.workload.m_tasks is not None else []),
+                   if scenario.workload.m_tasks is not None else [])
+                + list(extra_ignored),
             },
             metrics=metrics, scenario_name=scenario.name)
 
@@ -361,7 +406,15 @@ class BatchedBackend(Backend):
             raise BackendError(f"batched backend: dt must be > 0, got {dt}")
         slot, works, powers, cfg, scale = self.compile(scenarios, dt)
         bm = simulate_batch(slot, works, powers, cfg, power_scale=scale)
-        return [self._result(sc, bm, i, cfg)
+        extra_ignored = []
+        if scenarios[0].workload.is_trace:
+            from ..traces import TraceSchema
+            wl = scenarios[0].workload.materialize(scenarios[0].seed)
+            if isinstance(wl, TraceSchema) and wl.n_tiers > 1:
+                # the fluid model has no task ordering, so tiers cannot
+                # affect it — flagged, not rejected
+                extra_ignored.append("workload trace priorities")
+        return [self._result(sc, bm, i, cfg, extra_ignored)
                 for i, sc in enumerate(scenarios)]
 
 
@@ -383,7 +436,7 @@ class LegacyBackend(Backend):
         if scenario.policy.name != "psts":
             return (f"models exactly one full PSTS pass; policy "
                     f"{scenario.policy.name!r} is not expressible")
-        if scenario.workload.trace_path is not None:
+        if scenario.workload.is_trace:
             return ("samples its own workload realization; trace replay "
                     "needs the events or batched backend")
         return _unknown_policy_params(scenario)

@@ -6,6 +6,8 @@
     python -m repro.lab run scenario.json --backend events --out result.json
     python -m repro.lab sweep scenario.json --grid seed=0:64 --backend auto
     python -m repro.lab backends scenario.json      # eligibility report
+    python -m repro.lab trace events.csv.gz --format google \
+        --param constraints_path=constr.csv         # inspect / convert
 
 Grid axes are ``path=values`` with dotted scenario paths: ``seed=0:64``
 (range), ``seed=0:64:4`` (strided), ``policy.name=jsq,psts`` (list),
@@ -159,6 +161,37 @@ def _table(results) -> None:
         print(f"{r.backend:<9} {r.fingerprint:<17} " + " ".join(cells))
 
 
+def _trace_cmd(args) -> int:
+    from ..traces import load_trace, write_normalized_csv
+    params = {}
+    for item in args.param:
+        if "=" not in item:
+            raise SystemExit(f"--param {item!r}: expected K=V")
+        k, v = item.split("=", 1)
+        params[k] = _parse_value(v)
+    trace = load_trace(args.path, format=args.format, params=params,
+                       scale=args.scale, seed=args.seed)
+    span = trace.horizon - (float(trace.t_arrive[0]) if trace.m else 0.0)
+    print(f"tasks        {trace.m}")
+    print(f"span         {span:.3f} time units")
+    print(f"total work   {float(trace.works.sum()):.3f}")
+    print(f"mean packets {float(trace.packets.mean()) if trace.m else 0:.3f}")
+    tiers = trace.tier_counts()
+    print(f"tiers        {len(tiers)}"
+          + "".join(f"\n  tier {t:<3} {c} task(s)"
+                    for t, c in tiers.items()))
+    c = trace.constraints
+    print(f"constraints  {c.k} row(s)"
+          + (f" over attrs {sorted(c.attr_names)}" if c.k else ""))
+    if args.out:
+        write_normalized_csv(trace, args.out,
+                             constraints_path=args.out_constraints)
+        print(f"wrote normalized trace to {args.out}"
+              + (f" (+ {args.out_constraints})"
+                 if args.out_constraints and not c.empty else ""))
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.lab",
@@ -193,7 +226,29 @@ def main(argv: list[str] | None = None) -> int:
                             help="eligibility report for a scenario file")
     p_back.add_argument("scenario")
 
+    from ..traces import TRACE_FORMATS
+    p_tr = sub.add_parser(
+        "trace", help="inspect a real trace file (and optionally convert "
+                      "it to the normalized CSV format)")
+    p_tr.add_argument("path")
+    p_tr.add_argument("--format", default="csv",
+                      choices=sorted(TRACE_FORMATS))
+    p_tr.add_argument("--param", action="append", default=[],
+                      metavar="K=V", help="parser kwarg, e.g. "
+                      "constraints_path=FILE or time_scale=1e-6")
+    p_tr.add_argument("--scale", type=float, default=None,
+                      help="bootstrap an Nx-rate resample (trace_scale)")
+    p_tr.add_argument("--seed", type=int, default=0,
+                      help="resample seed (only with --scale)")
+    p_tr.add_argument("--out", default=None,
+                      help="write the normalized 4-column CSV here")
+    p_tr.add_argument("--out-constraints", default=None,
+                      help="write the constraints JSON sidecar here")
+
     args = parser.parse_args(argv)
+
+    if args.cmd == "trace":
+        return _trace_cmd(args)
 
     if args.cmd == "template":
         print(PRESETS[args.preset]().to_json())

@@ -20,6 +20,7 @@ import dataclasses
 import hashlib
 import inspect
 import json
+import os
 import warnings
 from dataclasses import dataclass, field, fields, replace
 from types import MappingProxyType
@@ -37,6 +38,7 @@ from ..runtime.workload import (
 __all__ = [
     "ClusterSpec",
     "WorkloadSpec",
+    "TraceRef",
     "FaultSpec",
     "PolicySpec",
     "Scenario",
@@ -72,6 +74,36 @@ def _thaw(value):
     return value
 
 
+# content-digest cache: re-hashing a million-row trace for every scenario
+# in a sweep would dominate; (mtime_ns, size) invalidates edited files
+_DIGEST_CACHE: dict[tuple, bytes] = {}
+
+# materialized trace cache, keyed on (spec json, seed, content digest)
+_TRACE_CACHE: dict[tuple, Workload] = {}
+
+# parsed-trace cache: the expensive part of a TraceRef load is the file
+# parse, which is seed-independent — a 64-seed sweep over a scaled trace
+# must parse once and resample 64 times, not re-ingest 64 times
+_PARSE_CACHE: dict[tuple, object] = {}
+
+
+def _file_digest(path: str) -> bytes:
+    try:
+        st = os.stat(path)
+    except OSError as exc:
+        raise ValueError(f"trace file {path!r} unreadable: {exc}") from exc
+    key = (os.path.abspath(path), st.st_mtime_ns, st.st_size)
+    if key not in _DIGEST_CACHE:
+        h = hashlib.sha256()
+        with open(path, "rb") as fh:
+            for block in iter(lambda: fh.read(1 << 20), b""):
+                h.update(block)
+        if len(_DIGEST_CACHE) > 64:
+            _DIGEST_CACHE.clear()
+        _DIGEST_CACHE[key] = h.digest()
+    return _DIGEST_CACHE[key]
+
+
 class _SpecBase:
     """Shared dict/JSON plumbing for the frozen spec dataclasses."""
 
@@ -105,6 +137,9 @@ class ClusterSpec(_SpecBase):
     power_seed: int = 0
     d: int | None = None            # hyper-grid dimension; None = optimal_dim
     bandwidth: float = 64.0         # packets per time unit while migrating
+    # node attribute table {name: (n,) values} — what trace placement
+    # constraints ("machine_class >= 2") are evaluated against
+    attrs: Mapping | None = None
 
     def __post_init__(self):
         if (self.powers is None) == (self.n_nodes is None):
@@ -114,6 +149,15 @@ class ClusterSpec(_SpecBase):
                                tuple(float(p) for p in self.powers))
             if any(p <= 0 for p in self.powers):
                 raise ValueError("powers must be > 0")
+        if self.attrs is not None:
+            frozen = _freeze({str(k): tuple(float(x) for x in v)
+                              for k, v in dict(self.attrs).items()})
+            for name, vals in frozen.items():
+                if len(vals) != self.size:
+                    raise ValueError(
+                        f"attr {name!r}: {len(vals)} values for "
+                        f"{self.size} nodes")
+            object.__setattr__(self, "attrs", frozen)
 
     @property
     def size(self) -> int:
@@ -127,35 +171,115 @@ class ClusterSpec(_SpecBase):
         return rng.integers(self.power_low, self.power_high + 1,
                             size=self.n_nodes).astype(np.float64)
 
+    def resolve_attrs(self) -> dict | None:
+        """Node attribute table as the runtime consumes it, or ``None``."""
+        if self.attrs is None:
+            return None
+        return {k: tuple(v) for k, v in self.attrs.items()}
+
+
+@dataclass(frozen=True)
+class TraceRef(_SpecBase):
+    """A reference to a real-trace file parsed by :mod:`repro.traces`.
+
+    ``format`` picks the parser (``csv`` | ``google`` | ``azure``),
+    ``params`` its keyword arguments (``constraints_path``,
+    ``vmtypes_path``, ``time_scale``, ...). ``scale`` bootstraps an
+    Nx-rate workload from the trace via :func:`repro.traces.trace_scale`,
+    driven by the *scenario* seed — a seed sweep over a scaled trace is a
+    real ensemble, where a raw replay ignores the seed axis entirely.
+    """
+
+    path: str = ""
+    format: str = "csv"
+    params: dict = field(default_factory=dict)
+    scale: float | None = None
+
+    def __post_init__(self):
+        from ..traces import TRACE_FORMATS
+        if not self.path:
+            raise ValueError("TraceRef needs a path")
+        if self.format not in TRACE_FORMATS:
+            raise ValueError(f"unknown trace format {self.format!r}; "
+                             f"have {sorted(TRACE_FORMATS)}")
+        if self.scale is not None and self.scale <= 0:
+            raise ValueError(f"scale must be > 0, got {self.scale}")
+        # reject typo'd parser params here, not as a mid-run TypeError
+        fn = TRACE_FORMATS[self.format]
+        allowed = {p.name for p in
+                   inspect.signature(fn).parameters.values()
+                   if p.kind == p.KEYWORD_ONLY}
+        unknown = set(self.params) - allowed
+        if unknown:
+            raise ValueError(
+                f"trace format {self.format!r} params {sorted(unknown)} "
+                f"unknown; accepted: {sorted(allowed)}")
+        object.__setattr__(self, "params", _frozen_params(self.params))
+
+    def side_paths(self) -> tuple[str, ...]:
+        """Companion files (constraint tables, vmType joins) whose contents
+        are part of this reference's identity."""
+        return tuple(str(v) for k, v in sorted(self.params.items())
+                     if k.endswith("_path") and v is not None)
+
+    def load(self, seed: int):
+        """Parse (and optionally rescale) the referenced trace. The
+        seed-independent parse is memoized on (ref-sans-scale, file
+        contents); only the cheap per-seed resample runs per call."""
+        from ..traces import load_trace, trace_scale
+        key = (self.path, self.format,
+               json.dumps(_thaw(self.params), sort_keys=True),
+               tuple(_file_digest(p)
+                     for p in (self.path, *self.side_paths())))
+        if key not in _PARSE_CACHE:
+            if len(_PARSE_CACHE) >= 4:
+                _PARSE_CACHE.clear()
+            _PARSE_CACHE[key] = load_trace(self.path, format=self.format,
+                                           params=dict(self.params))
+        trace = _PARSE_CACHE[key]
+        if self.scale is None:
+            return trace
+        return trace_scale(trace, float(self.scale), seed=seed)
+
 
 @dataclass(frozen=True)
 class WorkloadSpec(_SpecBase):
     """The offered load: an arrival process over the paper's work/packet
     marginals, or a trace file. ``params`` are the process kwargs
     (``rate``, ``rate_hi``, ...); the realization seed lives on the
-    Scenario so sweeps can vary it alone."""
+    Scenario so sweeps can vary it alone.
+
+    Trace workloads come in two spellings: ``trace_path`` (PR 2's bare
+    3-column CSV) and ``trace=TraceRef(...)`` (real-trace formats with
+    priorities, constraints and rate scaling)."""
 
     process: str = "poisson"
-    horizon: float | None = 100.0  # None = whole trace (trace_path only)
+    horizon: float | None = 100.0  # None = whole trace (traces only)
     work_dist: str = "uniform"
     work_mean: float = 4.0
     packet_mean: float = 8.0
     params: dict = field(default_factory=dict)
     trace_path: str | None = None   # CSV of t_arrive,work,packets; overrides
                                     # process/work_dist sampling entirely
+    trace: TraceRef | None = None   # real-trace reference (repro.traces)
     m_tasks: int | None = None      # task-count override for the static
                                     # legacy backend (paper: 4000)
 
     def __post_init__(self):
-        if self.trace_path is None:
+        if isinstance(self.trace, Mapping):
+            object.__setattr__(self, "trace",
+                               TraceRef.from_dict(_thaw(self.trace)))
+        if self.trace_path is not None and self.trace is not None:
+            raise ValueError("give at most one of trace_path / trace")
+        if self.trace_path is None and self.trace is None:
             if self.process not in ARRIVAL_PROCESSES:
                 raise ValueError(
                     f"unknown arrival process {self.process!r}; "
                     f"have {sorted(ARRIVAL_PROCESSES)}")
             if self.horizon is None:
                 raise ValueError("horizon=None (replay everything) needs a "
-                                 "trace_path; arrival processes need a "
-                                 "horizon")
+                                 "trace_path or trace; arrival processes "
+                                 "need a horizon")
             # reject typo'd process params here, not as a mid-run TypeError
             fn = ARRIVAL_PROCESSES[self.process]
             allowed = {p.name for p in
@@ -168,31 +292,70 @@ class WorkloadSpec(_SpecBase):
                     f"unknown; accepted: {sorted(allowed)}")
         object.__setattr__(self, "params", _frozen_params(self.params))
 
-    def materialize(self, seed: int) -> Workload:
-        """One concrete realization of this workload. Trace truncation at
-        the horizon is loud — a silently clipped replay would be attributed
-        to the whole trace."""
+    @property
+    def is_trace(self) -> bool:
+        return self.trace_path is not None or self.trace is not None
+
+    def trace_files(self) -> tuple[str, ...]:
+        """Every file this workload's identity depends on."""
         if self.trace_path is not None:
-            wl = load_trace_csv(self.trace_path)
-            if self.horizon is not None and wl.m:
-                keep = wl.t_arrive < self.horizon
-                kept = int(keep.sum())
-                if kept < wl.m:
-                    warnings.warn(
-                        f"trace {self.trace_path!r}: {wl.m - kept} of "
-                        f"{wl.m} tasks arrive at/after horizon="
-                        f"{self.horizon} and are dropped (declare "
-                        f'"horizon": null to replay everything)',
-                        stacklevel=2)
-                    wl = Workload(t_arrive=wl.t_arrive[keep],
-                                  works=wl.works[keep],
-                                  packets=wl.packets[keep])
+            return (self.trace_path,)
+        if self.trace is not None:
+            return (self.trace.path, *self.trace.side_paths())
+        return ()
+
+    def content_digest(self) -> str | None:
+        """sha256 over the referenced trace files' *contents* (chained in
+        path order), or ``None`` for synthetic workloads. This is what
+        makes two different files at the same path fingerprint apart."""
+        files = self.trace_files()
+        if not files:
+            return None
+        h = hashlib.sha256()
+        for p in files:
+            h.update(_file_digest(p))
+        return h.hexdigest()
+
+    def _clip(self, wl: Workload, label: str) -> Workload:
+        """Horizon truncation, loudly — a silently clipped replay would be
+        attributed to the whole trace."""
+        if self.horizon is None or not wl.m:
             return wl
-        return make_workload(self.process, horizon=self.horizon,
-                             work_dist=self.work_dist,
-                             work_mean=self.work_mean,
-                             packet_mean=self.packet_mean,
-                             seed=seed, **self.params)
+        keep = wl.t_arrive < self.horizon
+        kept = int(keep.sum())
+        if kept == wl.m:
+            return wl
+        warnings.warn(
+            f"trace {label!r}: {wl.m - kept} of {wl.m} tasks arrive "
+            f"at/after horizon={self.horizon} and are dropped (declare "
+            f'"horizon": null to replay everything)', stacklevel=3)
+        if hasattr(wl, "clipped"):
+            return wl.clipped(self.horizon)
+        return Workload(t_arrive=wl.t_arrive[keep], works=wl.works[keep],
+                        packets=wl.packets[keep])
+
+    def materialize(self, seed: int) -> Workload:
+        """One concrete realization of this workload. Trace loads are
+        memoized on (spec, seed, file contents): eligibility checks and the
+        run itself would otherwise each re-ingest a million-row file."""
+        if self.trace is None and self.trace_path is None:
+            return make_workload(self.process, horizon=self.horizon,
+                                 work_dist=self.work_dist,
+                                 work_mean=self.work_mean,
+                                 packet_mean=self.packet_mean,
+                                 seed=seed, **self.params)
+        key = (json.dumps(self.to_dict(), sort_keys=True), int(seed),
+               self.content_digest())
+        if key not in _TRACE_CACHE:
+            if self.trace is not None:
+                wl = self._clip(self.trace.load(seed), self.trace.path)
+            else:
+                wl = self._clip(load_trace_csv(self.trace_path),
+                                self.trace_path)
+            if len(_TRACE_CACHE) >= 8:
+                _TRACE_CACHE.clear()
+            _TRACE_CACHE[key] = wl
+        return _TRACE_CACHE[key]
 
 
 @dataclass(frozen=True)
@@ -215,13 +378,23 @@ class FaultSpec(_SpecBase):
 @dataclass(frozen=True)
 class PolicySpec(_SpecBase):
     """The algorithm under test: a name from the runtime policy registry
-    plus its constructor kwargs and the trigger evaluation period."""
+    plus its constructor kwargs and the trigger evaluation period.
+
+    ``constraint_mode`` only matters for constrained traces: ``"aware"``
+    hands the policy each task's feasibility mask; ``"blind"`` hides it
+    (the engine still *enforces* constraints either way — blind is the
+    constraint-unaware dispatch baseline, not a correctness toggle)."""
 
     name: str = "psts"
     trigger_period: float = 2.0
     params: dict = field(default_factory=dict)
+    constraint_mode: str = "aware"
 
     def __post_init__(self):
+        if self.constraint_mode not in ("aware", "blind"):
+            raise ValueError(
+                f"constraint_mode must be 'aware' or 'blind', "
+                f"got {self.constraint_mode!r}")
         object.__setattr__(self, "params", _frozen_params(self.params))
 
 
@@ -269,13 +442,16 @@ class Scenario(_SpecBase):
     def fingerprint(self) -> str:
         """Stable 16-hex-digit identity of the canonical JSON form.
 
-        Identity covers the *declaration* only: a ``trace_path`` is hashed
-        as a path, not by file contents — results from a trace file edited
-        between runs share a fingerprint, just as two runs under any
-        changed external environment would.
+        Trace workloads additionally fold in a sha256 of the referenced
+        files' *contents* — two different files at the same path must not
+        collide in sweep caches or result attribution, and a trace edited
+        between runs is a different experiment.
         """
         canon = json.dumps(self.to_dict(), sort_keys=True,
                            separators=(",", ":"))
+        digest = self.workload.content_digest()
+        if digest is not None:
+            canon += f"|trace-sha256:{digest}"
         return hashlib.sha256(canon.encode()).hexdigest()[:16]
 
     # -- grid support -------------------------------------------------------
@@ -303,5 +479,6 @@ def _spec_hash(self) -> int:
                  json.dumps(self.to_dict(), sort_keys=True)))
 
 
-for _cls in (ClusterSpec, WorkloadSpec, FaultSpec, PolicySpec, Scenario):
+for _cls in (ClusterSpec, WorkloadSpec, TraceRef, FaultSpec, PolicySpec,
+             Scenario):
     _cls.__hash__ = _spec_hash

@@ -46,15 +46,19 @@ class Metrics:
     makespan: float = 0.0
     responses: list[float] = field(default_factory=list)
     waits: list[float] = field(default_factory=list)
+    # per-priority-tier wait samples (tier 0 = most important); synthetic
+    # workloads land entirely in tier 0
+    waits_by_tier: dict[int, list[float]] = field(default_factory=dict)
 
     def observe_arrival(self) -> None:
         self.arrived += 1
 
     def observe_completion(self, response: float, wait: float,
-                           t_finish: float) -> None:
+                           t_finish: float, tier: int = 0) -> None:
         self.completed += 1
         self.responses.append(float(response))
         self.waits.append(float(wait))
+        self.waits_by_tier.setdefault(int(tier), []).append(float(wait))
         self.makespan = max(self.makespan, float(t_finish))
 
     # -- derived -----------------------------------------------------------
@@ -69,6 +73,20 @@ class Metrics:
     @property
     def mean_wait(self) -> float:
         return float(np.mean(self.waits)) if self.waits else float("nan")
+
+    def wait_by_tier(self) -> dict[int, dict]:
+        """Per-priority-tier wait statistics (mean / P99 / count), the
+        quantity trace experiments compare policies on. Not part of
+        :meth:`summary` — tiers only exist for trace workloads, and the
+        canonical cross-backend schema stays scalar."""
+        return {
+            tier: {
+                "mean_wait": float(np.mean(ws)),
+                "p99_wait": nearest_rank(np.asarray(ws), 99.0),
+                "completed": len(ws),
+            }
+            for tier, ws in sorted(self.waits_by_tier.items())
+        }
 
     def summary(self) -> dict:
         """The full canonical schema — every accumulated quantity. This is

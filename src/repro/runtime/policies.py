@@ -48,16 +48,24 @@ __all__ = [
 
 
 def positional_arrival(loads: np.ndarray, powers: np.ndarray,
-                       work: float) -> int:
+                       work: float, mask: np.ndarray | None = None) -> int:
     """Place one arrival by the positional rule over deficit intervals.
 
     ``deficit_i = max(gamma_i * (W + work) - load_i, 0)``; the task's single
     work span maps to the midpoint fraction 0.5 of the deficit scan. When the
     cluster is perfectly full (no deficit anywhere) fall back to the least
     normalised load among active nodes.
+
+    ``mask`` restricts the rule to a feasible subset (placement
+    constraints): infeasible nodes contribute no power and no load to the
+    balance — the task is positioned within its feasible sub-cluster.
     """
     loads = np.asarray(loads, dtype=np.float64)
     powers = np.asarray(powers, dtype=np.float64)
+    if mask is not None:
+        mask = np.asarray(mask, dtype=bool)
+        powers = np.where(mask, powers, 0.0)
+        loads = np.where(mask, loads, 0.0)
     pi = powers.sum()
     if pi <= 0:
         raise ValueError("no active nodes to place on")
@@ -114,28 +122,39 @@ def make_policy(spec: str | Policy, **kwargs) -> Policy:
 # Baselines
 # ---------------------------------------------------------------------------
 
+def _allowed(view) -> np.ndarray:
+    """Active nodes intersected with the decision's feasibility mask (the
+    engine supplies ``view.feasible`` for constrained trace tasks)."""
+    allowed = view.grid.active
+    if view.feasible is not None:
+        allowed = allowed & view.feasible
+    return allowed
+
+
 @register("random")
 @dataclass
 class RandomPolicy(Policy):
-    """Uniform over active nodes — the no-information baseline."""
+    """Uniform over active (feasible) nodes — the no-information baseline."""
 
     def on_arrival(self, work, packets, view):
-        active = np.flatnonzero(view.grid.active)
-        return int(active[view.rng.integers(0, active.size)])
+        nodes = np.flatnonzero(_allowed(view))
+        if nodes.size == 0:
+            raise ValueError("no active nodes to place on")
+        return int(nodes[view.rng.integers(0, nodes.size)])
 
 
 @register("round_robin")
 @dataclass
 class RoundRobinPolicy(Policy):
-    """Cycle over active nodes; blind to load and power."""
+    """Cycle over active (feasible) nodes; blind to load and power."""
 
     _i: int = 0
 
     def on_arrival(self, work, packets, view):
-        active = np.flatnonzero(view.grid.active)
-        if active.size == 0:
+        nodes = np.flatnonzero(_allowed(view))
+        if nodes.size == 0:
             raise ValueError("no active nodes to place on")
-        node = int(active[self._i % active.size])
+        node = int(nodes[self._i % nodes.size])
         self._i += 1
         return node
 
@@ -147,7 +166,7 @@ class WeightedJsqPolicy(Policy):
     greedy earliest-completion, the strong centralized baseline."""
 
     def on_arrival(self, work, packets, view):
-        powers = view.grid.powers
+        powers = np.where(_allowed(view), view.grid.powers, 0.0)
         with np.errstate(divide="ignore", invalid="ignore"):
             eta = np.where(powers > 0,
                            (view.loads + work) / np.maximum(powers, 1e-12),
@@ -162,7 +181,8 @@ class ArrivalOnlyPolicy(Policy):
     get if the crossover trigger is disabled (paper Table 7 fast path)."""
 
     def on_arrival(self, work, packets, view):
-        return positional_arrival(view.loads, view.grid.powers, work)
+        return positional_arrival(view.loads, view.grid.powers, work,
+                                  mask=view.feasible)
 
 
 @register("psts")

@@ -45,6 +45,12 @@ class Task:
     t_finish: float | None = None
     restarts: int = 0
     migrations: int = 0
+    # priority tier (0 = most important): orders admission within an
+    # arrival batch and service within a node's queue, nonpreemptively
+    priority: int = 0
+    # constraint feasibility over grid slots (None = feasible everywhere);
+    # set once at admission from the trace's constraints x cluster attrs
+    feasible: np.ndarray | None = None
     # (time, node) history of every placement decision, for invariant checks
     placements: list[tuple[float, int]] = field(default_factory=list)
 
@@ -66,6 +72,9 @@ class ClusterView:
     loads: np.ndarray          # queued + remaining running work per node
     m_seen: int                # arrivals so far
     rng: np.random.Generator   # engine-owned, for stochastic policies
+    # feasible nodes for the task under decision (None = all); constraint-
+    # blind runs never populate this, so policies stay mask-oblivious there
+    feasible: np.ndarray | None = None
 
 
 class ClusterRuntime:
@@ -74,7 +83,9 @@ class ClusterRuntime:
     def __init__(self, powers, policy: str | Policy = "psts", *,
                  d: int | None = None, trigger_period: float = 2.0,
                  bandwidth: float = 64.0, seed: int = 0,
-                 policy_kwargs: dict | None = None):
+                 policy_kwargs: dict | None = None,
+                 node_attrs: dict | None = None,
+                 constraint_blind: bool = False):
         powers = np.asarray(powers, dtype=np.float64)
         self._powers_full = powers.copy()
         self.grid = embed(powers, optimal_dim(powers.size) if d is None else d)
@@ -89,6 +100,26 @@ class ClusterRuntime:
         self._in_flight: set[int] = set()
         self._eq = EventQueue()
         self._now = 0.0
+        # node attribute table for placement constraints: {name: (n,) values}
+        # over *physical* nodes (virtual padding slots are never feasible)
+        self.attr_names: tuple[str, ...] = ()
+        self.attr_matrix: np.ndarray | None = None
+        if node_attrs:
+            names = tuple(sorted(node_attrs))
+            cols = []
+            for name in names:
+                col = np.asarray(node_attrs[name], dtype=np.float64)
+                if col.shape != (powers.size,):
+                    raise ValueError(
+                        f"node attr {name!r}: {col.shape[0] if col.ndim else 0}"
+                        f" values for {powers.size} nodes")
+                cols.append(col)
+            self.attr_names = names
+            self.attr_matrix = np.stack(cols, axis=1)
+        # blind mode: the engine still *enforces* feasibility (a constrained
+        # task never lands on an infeasible node) but hides the mask from
+        # the policy — the constraint-unaware baseline trace benchmarks use
+        self.constraint_blind = bool(constraint_blind)
 
     # -- state inspection ---------------------------------------------------
     def loads(self, t: float) -> np.ndarray:
@@ -103,9 +134,11 @@ class ClusterRuntime:
                 loads[n] += max(r.work - done, 0.0)
         return loads
 
-    def view(self, t: float) -> ClusterView:
+    def view(self, t: float,
+             feasible: np.ndarray | None = None) -> ClusterView:
         return ClusterView(time=t, grid=self.grid, loads=self.loads(t),
-                           m_seen=self.metrics.arrived, rng=self.rng)
+                           m_seen=self.metrics.arrived, rng=self.rng,
+                           feasible=feasible)
 
     def _outstanding(self) -> int:
         queued = sum(len(q) for q in self._queues)
@@ -133,21 +166,41 @@ class ClusterRuntime:
 
     # -- mechanics ----------------------------------------------------------
     def _place(self, task: Task, t: float) -> None:
-        """Ask the policy for a node; fall back to the least-loaded active
-        node if it answers with a virtual/failed slot (or, during a total
-        outage, to node 0, where the task queues until a node rejoins)."""
+        """Ask the policy for a node; fall back to the least-loaded
+        *feasible* active node if it answers with a virtual/failed/
+        infeasible slot. The engine always enforces constraints — even
+        under ``constraint_blind``, which only hides the mask from the
+        policy. When every feasible node is down, the task parks on the
+        first feasible slot's queue until a node rejoins (the constrained
+        analogue of the total-outage park on node 0)."""
+        fmask = task.feasible
+        view_mask = None if (fmask is None or self.constraint_blind) \
+            else fmask
         try:
             node = self.policy.on_arrival(task.work, task.packets,
-                                          self.view(t))
+                                          self.view(t, feasible=view_mask))
         except ValueError:  # e.g. positional rule with zero active power
             node = -1
-        if not (0 <= node < self.grid.capacity) or not self.grid.active[node]:
-            loads = self.loads(t)
-            with np.errstate(divide="ignore", invalid="ignore"):
-                ratio = np.where(self.grid.active,
-                                 loads / np.maximum(self.grid.powers, 1e-12),
-                                 np.inf)
-            node = int(np.argmin(ratio))
+        ok = (0 <= node < self.grid.capacity and self.grid.active[node]
+              and (fmask is None or fmask[node]))
+        if not ok:
+            allowed = (self.grid.active if fmask is None
+                       else self.grid.active & fmask)
+            if allowed.any():
+                loads = self.loads(t)
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    ratio = np.where(
+                        allowed,
+                        loads / np.maximum(self.grid.powers, 1e-12), np.inf)
+                node = int(np.argmin(ratio))
+            elif fmask is not None:
+                if not fmask.any():  # belt-and-braces: admission validates
+                    from ..traces.schema import InfeasibleTaskError
+                    raise InfeasibleTaskError(
+                        f"task {task.tid}: constraints exclude every node")
+                node = int(np.flatnonzero(fmask)[0])
+            else:
+                node = 0  # total outage: park until a join
         task.node = node
         task.placements.append((t, node))
         self._queues[node].append(task)
@@ -158,7 +211,10 @@ class ClusterRuntime:
             return
         if not self.grid.active[node]:
             return
-        task = self._queues[node].pop(0)
+        q = self._queues[node]
+        # nonpreemptive priority service: best tier first, FIFO within tier
+        i = min(range(len(q)), key=lambda j: (q[j].priority, j))
+        task = q.pop(i)
         task.t_start = t
         self._running[node] = task
         service = task.work / self.grid.powers[node]
@@ -166,7 +222,8 @@ class ClusterRuntime:
                       (task, node, task.restarts))
 
     def _strand(self, node: int, t: float) -> list[Task]:
-        """Pull every task off a failed node; running restarts from scratch."""
+        """Pull every task off a failed node; running restarts from scratch.
+        Re-placement happens best tier first (same order as admission)."""
         stranded = list(self._queues[node])
         self._queues[node] = []
         r = self._running[node]
@@ -178,30 +235,52 @@ class ClusterRuntime:
             stranded.append(r)
         for task in stranded:
             task.node = -1
-        return sorted(stranded, key=lambda task: task.tid)
+        return sorted(stranded, key=lambda task: (task.priority, task.tid))
 
     def _rebalance(self, t: float) -> None:
         """Migrate queued tasks to the PSTS placement (nonpreemptive: running
-        and in-flight tasks are untouched)."""
+        and in-flight tasks are untouched).
+
+        Constrained tasks balance within their feasible sub-cluster:
+        queued work is partitioned by feasibility signature, and each
+        partition runs PSTS over the grid with infeasible nodes virtualized
+        (power 0) — the paper's incomplete-grid treatment reused as the
+        constraint mechanism. Unconstrained tasks balance over the full
+        grid as before."""
         queued = [task for q in self._queues for task in q]
         if not queued:
             return
-        works = np.array([task.work for task in queued])
-        nodes = np.array([task.node for task in queued])
-        res = psts_schedule(works, nodes, self.grid)
-        for task, dst in zip(queued, res.dest):
-            dst = int(dst)
-            if dst == task.node:
-                continue
-            self._queues[task.node].remove(task)
-            task.node = -1
-            task.migrations += 1
-            self._in_flight.add(task.tid)
-            self.metrics.migrations += 1
-            self.metrics.moved_packets += task.packets
-            self.metrics.moved_units += task.work
-            delay = task.packets / self.bandwidth
-            self._eq.push(t + delay, EventKind.MIGRATION_ARRIVE, (task, dst))
+        groups: dict[bytes | None, list[Task]] = {}
+        for task in queued:
+            key = None if task.feasible is None else task.feasible.tobytes()
+            groups.setdefault(key, []).append(task)
+        for key, tasks in groups.items():
+            if key is None:
+                grid = self.grid
+            else:
+                fmask = tasks[0].feasible
+                grid = HyperGrid(self.grid.dims,
+                                 np.where(fmask, self.grid.powers, 0.0),
+                                 self.grid.active & fmask)
+                if grid.total_power <= 0:
+                    continue  # every feasible node is down: tasks stay put
+            works = np.array([task.work for task in tasks])
+            nodes = np.array([task.node for task in tasks])
+            res = psts_schedule(works, nodes, grid)
+            for task, dst in zip(tasks, res.dest):
+                dst = int(dst)
+                if dst == task.node:
+                    continue
+                self._queues[task.node].remove(task)
+                task.node = -1
+                task.migrations += 1
+                self._in_flight.add(task.tid)
+                self.metrics.migrations += 1
+                self.metrics.moved_packets += task.packets
+                self.metrics.moved_units += task.work
+                delay = task.packets / self.bandwidth
+                self._eq.push(t + delay, EventKind.MIGRATION_ARRIVE,
+                              (task, dst))
 
     # -- event handlers -----------------------------------------------------
     def _on_arrival(self, task: Task, t: float) -> None:
@@ -218,7 +297,7 @@ class ClusterRuntime:
         self.metrics.observe_completion(
             response=t - task.t_arrive,
             wait=(t - task.t_arrive) - task.work / self.grid.powers[node],
-            t_finish=t)
+            t_finish=t, tier=task.priority)
         self._try_start(node, t)
 
     def _on_migration_arrive(self, task: Task, dst: int, t: float) -> None:
@@ -310,18 +389,66 @@ class ClusterRuntime:
                 and not self._eq.pending(EventKind.TRIGGER_EVAL)):
             self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
 
+    def _resolve_feasibility(self, workload) -> list | None:
+        """Per-task feasibility masks over grid slots, or ``None`` for
+        unconstrained workloads. Identical masks share one array so
+        rebalance grouping (`tobytes` keys) and memory stay tight."""
+        constraints = getattr(workload, "constraints", None)
+        if constraints is None or constraints.empty:
+            return None
+        if self.attr_matrix is None:
+            from ..traces.schema import InfeasibleTaskError
+            raise InfeasibleTaskError(
+                f"workload tasks carry placement constraints over "
+                f"attributes {sorted(constraints.attr_names)} but the "
+                f"cluster declares no node attrs; pass node_attrs= "
+                f"(lab: ClusterSpec(attrs={{...}}))")
+        phys = workload.feasibility(self.attr_names, self.attr_matrix)
+        cap = self.grid.capacity
+        padded = np.zeros((phys.shape[0], cap), dtype=bool)
+        padded[:, :phys.shape[1]] = phys
+        cache: dict[bytes, np.ndarray] = {}
+        out = []
+        for i in range(phys.shape[0]):
+            if phys[i].all():
+                out.append(None)  # unconstrained task: no mask at all
+                continue
+            key = padded[i].tobytes()
+            if key not in cache:
+                cache[key] = padded[i].copy()
+            out.append(cache[key])
+        return out
+
     # -- driver -------------------------------------------------------------
     def schedule_workload(self, workload: Workload, *, failures=(),
                           joins=(), tid_base: int = 0) -> None:
         """Queue a workload's arrivals and fault events. ``tid_base``
         offsets task ids so several workloads (federation members) share one
-        global id space."""
-        for i in range(workload.m):
+        global id space.
+
+        Trace workloads (``repro.traces.TraceSchema``) additionally carry
+        priorities and constraints: same-instant arrivals are admitted best
+        tier first (the event queue breaks timestamp ties by push order),
+        and each constrained task gets its feasibility mask resolved here,
+        once, against the cluster attribute table — a task no node can ever
+        satisfy is a loud :class:`InfeasibleTaskError` before the clock
+        starts, not a hang mid-run."""
+        priority = np.asarray(
+            getattr(workload, "priority", None)
+            if getattr(workload, "priority", None) is not None
+            else np.zeros(workload.m), dtype=np.int64)
+        masks = self._resolve_feasibility(workload)
+        # stable (t, tier) order: priority decides admission within a batch
+        order = np.lexsort((priority, workload.t_arrive))
+        for i in map(int, order):
             self._eq.push(workload.t_arrive[i], EventKind.ARRIVAL,
                           Task(tid=tid_base + i,
                                t_arrive=float(workload.t_arrive[i]),
                                work=float(workload.works[i]),
-                               packets=float(workload.packets[i])))
+                               packets=float(workload.packets[i]),
+                               priority=int(priority[i]),
+                               feasible=None if masks is None
+                               else masks[i]))
         for t, node in failures:
             self._eq.push(t, EventKind.NODE_FAIL, int(node))
         for t, node in joins:

@@ -1,0 +1,242 @@
+"""Google cluster-data task-events parser (clusterdata-2011 "v2" layout).
+
+Column -> field semantics (task_events table, one row per event)::
+
+    col  name                      used as
+    ---  ------------------------  -------------------------------------
+      0  timestamp (microseconds)  arrival / service-interval endpoints
+      2  job ID                    half of the (job, task) join key
+      3  task index                other half of the join key
+      5  event type                0 SUBMIT / 1 SCHEDULE / 2 EVICT /
+                                   3 FAIL / 4 FINISH / 5 KILL / 6 LOST
+      8  priority                  bigger = more important; remapped to
+                                   dense tiers with tier 0 = top
+      9  CPU request (cores)       work-rate factor
+     10  memory request            packets (migration payload size)
+
+The mapping onto :class:`~repro.traces.schema.TraceSchema`:
+
+* ``t_arrive`` — first SUBMIT timestamp per (job, task), re-zeroed to the
+  trace start and scaled by ``time_scale`` (default 1e-6: microseconds to
+  seconds).
+* ``works``   — service demand in core-seconds: (last terminal event -
+  first SCHEDULE) x CPU request. Tasks with no complete SCHEDULE->end
+  interval (still running when the excerpt ends) fall back to
+  ``default_duration`` (default: the median observed duration).
+* ``packets`` — memory request x ``packet_scale`` (memory is the state a
+  migration must move).
+* ``priority``/``constraints`` — see above; constraints come from the
+  companion task_constraints table (``constraints_path``) with columns
+  ``timestamp, job ID, task index, operator, attribute name, value``
+  and Google's operator codes 0 ``==`` / 1 ``!=`` / 2 ``<`` / 3 ``>``.
+  Non-numeric attribute values (opaque hashes in the public trace) are
+  dropped with a warning — map them to numbers in a preprocessing pass
+  if you need them.
+
+Rows may appear in any order (the public trace shards interleave); all
+joins are grouped/vectorized, so ingest is O(rows log rows) NumPy work.
+The Google v3 (2019) instance_events table projects onto the same columns
+(timestamp, collection ID, instance index, type, priority, resource
+request) — project it to this layout to reuse the parser.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from .io import iter_numeric_chunks, iter_text_chunks
+from .schema import OPS, Constraints, TraceSchema, dense_tiers
+
+__all__ = ["load_google_task_events", "GOOGLE_EVENT_TYPES"]
+
+GOOGLE_EVENT_TYPES = {
+    "SUBMIT": 0, "SCHEDULE": 1, "EVICT": 2, "FAIL": 3, "FINISH": 4,
+    "KILL": 5, "LOST": 6,
+}
+_TERMINAL = (2, 3, 4, 5, 6)
+_GOOGLE_OPS = {0: OPS["=="], 1: OPS["!="], 2: OPS["<"], 3: OPS[">"]}
+
+# task_events columns we read (see module docstring)
+_USECOLS = (0, 2, 3, 5, 8, 9, 10)
+_T, _JOB, _TIDX, _EV, _PRI, _CPU, _MEM = range(len(_USECOLS))
+
+
+def _pack_keys(job: np.ndarray, tidx: np.ndarray) -> np.ndarray:
+    """(job, task index) -> one int64 key. Packing must be identical across
+    the events and constraints files (the join compares raw keys), so ids
+    too large to pack losslessly are a loud error, not a local re-encode."""
+    job = job.astype(np.int64)
+    tidx = tidx.astype(np.int64)
+    if job.size == 0:
+        return job
+    if job.min() < 0 or tidx.min() < 0 or job.max() >= (1 << 42) \
+            or tidx.max() >= (1 << 21):
+        raise ValueError("job ID / task index outside the packable range "
+                         "(job < 2^42, index < 2^21); renumber the trace "
+                         "in a preprocessing pass")
+    return (job << 21) | tidx
+
+
+def _first_by_group(inv: np.ndarray, n: int, values: np.ndarray,
+                    order_key: np.ndarray) -> np.ndarray:
+    """Per group, the value at the smallest ``order_key`` (NaN where the
+    group has no rows)."""
+    out = np.full(n, np.nan)
+    order = np.lexsort((order_key, inv))
+    g = inv[order]
+    first = np.ones(g.shape[0], dtype=bool)
+    first[1:] = g[1:] != g[:-1]
+    out[g[first]] = values[order][first]
+    return out
+
+
+def load_google_task_events(path, *, constraints_path=None,
+                            time_scale: float = 1e-6,
+                            packet_scale: float = 64.0,
+                            default_duration: float | None = None,
+                            horizon: float | None = None,
+                            chunk_bytes: int = 1 << 24) -> TraceSchema:
+    """Parse a task_events file (plain or gzipped CSV) into a
+    :class:`TraceSchema`; see the module docstring for column semantics."""
+    chunks = list(iter_numeric_chunks(path, usecols=_USECOLS,
+                                      chunk_bytes=chunk_bytes))
+    if not chunks:
+        return TraceSchema(t_arrive=np.zeros(0), works=np.zeros(0),
+                           packets=np.zeros(0))
+    rows = np.concatenate(chunks, axis=0)
+    ev = rows[:, _EV].astype(np.int64)
+    keys = _pack_keys(rows[:, _JOB], rows[:, _TIDX])
+    uniq_keys, inv = np.unique(keys, return_inverse=True)
+
+    sub = ev == GOOGLE_EVENT_TYPES["SUBMIT"]
+    if not sub.any():
+        raise ValueError(f"google trace {path!r}: no SUBMIT rows")
+    n_all = uniq_keys.shape[0]
+    big = np.float64(np.inf)
+    ts = rows[:, _T]
+
+    def grouped_min(mask, values):
+        out = np.full(n_all, big)
+        np.minimum.at(out, inv[mask], values[mask])
+        return out
+
+    t_submit = grouped_min(sub, ts)
+    t_sched = grouped_min(ev == GOOGLE_EVENT_TYPES["SCHEDULE"], ts)
+    term = np.isin(ev, _TERMINAL)
+    t_end = np.full(n_all, -big)
+    np.maximum.at(t_end, inv[term], ts[term])
+
+    # per-task attributes from the earliest SUBMIT row
+    pri = _first_by_group(inv[sub], n_all, rows[sub, _PRI], ts[sub])
+    cpu = _first_by_group(inv[sub], n_all, rows[sub, _CPU], ts[sub])
+    mem = _first_by_group(inv[sub], n_all, rows[sub, _MEM], ts[sub])
+
+    seen = np.isfinite(t_submit) & (t_submit < big)
+    idx = np.flatnonzero(seen)
+    t_submit, t_sched, t_end = t_submit[idx], t_sched[idx], t_end[idx]
+    pri, cpu, mem = pri[idx], cpu[idx], mem[idx]
+    kept_keys = uniq_keys[idx]
+
+    dur = (t_end - t_sched) * time_scale
+    have_dur = np.isfinite(t_sched) & (t_sched < big) & (t_end > -big) \
+        & (dur > 0)
+    if default_duration is None:
+        if have_dur.any():
+            default_duration = float(np.median(dur[have_dur]))
+        else:
+            raise ValueError(
+                f"google trace {path!r}: no complete SCHEDULE->end "
+                f"interval and no default_duration given — cannot derive "
+                f"service demands")
+    dur = np.where(have_dur, dur, default_duration)
+    n_fallback = int((~have_dur).sum())
+    if n_fallback:
+        warnings.warn(
+            f"google trace {path!r}: {n_fallback} of {dur.shape[0]} tasks "
+            f"have no complete service interval; using "
+            f"default_duration={default_duration:g}", stacklevel=2)
+
+    good_cpu = cpu[np.isfinite(cpu) & (cpu > 0)]
+    cpu_fill = float(np.median(good_cpu)) if good_cpu.size else 1.0
+    cpu = np.where(np.isfinite(cpu) & (cpu > 0), cpu, cpu_fill)
+    mem = np.where(np.isfinite(mem) & (mem > 0), mem, 1.0 / packet_scale)
+    pri = np.where(np.isfinite(pri), pri, 0.0)
+
+    t_arrive = (t_submit - t_submit.min()) * time_scale
+    works = np.maximum(dur * cpu, 1e-9)
+    packets = np.maximum(mem * packet_scale, 1e-9)
+    tiers = dense_tiers(pri.astype(np.int64), higher_is_more_important=True)
+
+    order = np.argsort(t_arrive, kind="stable")
+    constraints = _load_constraints(constraints_path, kept_keys[order],
+                                    chunk_bytes)
+    trace = TraceSchema(t_arrive=t_arrive[order], works=works[order],
+                        packets=packets[order], priority=tiers[order],
+                        constraints=constraints)
+    if horizon is not None:
+        trace = trace.clipped(horizon)
+    return trace
+
+
+def _load_constraints(path, task_keys: np.ndarray,
+                      chunk_bytes: int) -> Constraints:
+    """task_constraints join: rows land on the trace position of their
+    (job, task index) key; rows for tasks outside the events file, or with
+    non-numeric attribute values, are dropped (counted in a warning)."""
+    if path is None:
+        return Constraints()
+    names: list[str] = []
+    name_idx: dict[str, int] = {}
+    t_job, t_tidx, t_op, t_attr, t_val = [], [], [], [], []
+    dropped = 0
+    for text in iter_text_chunks(path, chunk_bytes=chunk_bytes):
+        for line in text.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split(",")
+            if len(parts) < 6:
+                dropped += 1
+                continue
+            _, job, tidx, op, attr, value = parts[:6]
+            try:
+                op_code = _GOOGLE_OPS[int(float(op))]
+                val = float(value)
+                t_job.append(int(float(job)))
+                t_tidx.append(int(float(tidx)))
+            except (KeyError, ValueError):
+                dropped += 1
+                continue
+            attr = attr.strip()
+            if attr not in name_idx:
+                name_idx[attr] = len(names)
+                names.append(attr)
+            t_op.append(op_code)
+            t_attr.append(name_idx[attr])
+            t_val.append(val)
+    if dropped:
+        warnings.warn(f"task_constraints {path!r}: dropped {dropped} "
+                      f"row(s) (malformed, unknown operator, or "
+                      f"non-numeric attribute value)", stacklevel=3)
+    if not t_job:
+        return Constraints()
+    keys = _pack_keys(np.asarray(t_job), np.asarray(t_tidx))
+    # map constraint keys onto trace positions (task_keys is in final
+    # arrival order); unmatched keys are dropped
+    order = np.argsort(task_keys, kind="stable")
+    sorted_keys = task_keys[order]
+    pos = np.searchsorted(sorted_keys, keys)
+    pos = np.clip(pos, 0, sorted_keys.shape[0] - 1)
+    matched = sorted_keys[pos] == keys
+    if not matched.all():
+        warnings.warn(f"task_constraints {path!r}: "
+                      f"{int((~matched).sum())} row(s) reference tasks "
+                      f"absent from the events file", stacklevel=3)
+    task_pos = order[pos[matched]]
+    return Constraints(
+        tuple(names), task_pos,
+        np.asarray(t_attr, dtype=np.int32)[matched],
+        np.asarray(t_op, dtype=np.int8)[matched],
+        np.asarray(t_val, dtype=np.float64)[matched])

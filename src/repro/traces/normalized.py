@@ -1,0 +1,116 @@
+"""The repo's own normalized trace format (CSV + optional JSON sidecar).
+
+The interchange format every parser normalizes *to*, loadable directly so
+preprocessed traces round-trip without the original files:
+
+* CSV (plain or gzipped), ``#`` comments, one task per row, in any order::
+
+      t_arrive, work, packets[, priority]
+
+  The 3-column form is PR 2's ``load_trace_csv`` format (priority 0
+  everywhere); the 4-column form adds the tier.
+* optional constraints sidecar (JSON)::
+
+      {"attr_names": ["machine_class"],
+       "rows": [[task_index, "machine_class", ">=", 2.0], ...]}
+
+  ``task_index`` refers to the row's position in *arrival order* (the
+  order :func:`load_normalized_csv` returns), ops are the spellings in
+  :data:`repro.traces.schema.OPS`.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .io import read_numeric_csv
+from .schema import OPS, Constraints, TraceSchema
+
+__all__ = ["load_normalized_csv", "write_normalized_csv"]
+
+
+def _sniff_columns(path) -> int:
+    from .io import iter_text_chunks
+    for text in iter_text_chunks(path, chunk_bytes=1 << 16):
+        for line in text.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                return line.count(",") + 1
+    return 3
+
+
+def load_normalized_csv(path, *, constraints_path=None,
+                        horizon: float | None = None,
+                        chunk_bytes: int = 1 << 24) -> TraceSchema:
+    """Load the normalized CSV (3 or 4 columns) into a TraceSchema."""
+    n_cols = _sniff_columns(path)
+    if n_cols not in (3, 4):
+        raise ValueError(
+            f"trace {path!r}: expected 3 columns (t_arrive, work, packets) "
+            f"or 4 (+ priority), got {n_cols}")
+    rows = read_numeric_csv(path, usecols=tuple(range(n_cols)),
+                            chunk_bytes=chunk_bytes)
+    if rows.shape[0] == 0:
+        return TraceSchema(t_arrive=np.zeros(0), works=np.zeros(0),
+                           packets=np.zeros(0))
+    order = np.argsort(rows[:, 0], kind="stable")
+    rows = rows[order]
+    t, works, packets = rows[:, 0], rows[:, 1], rows[:, 2]
+    if (works <= 0).any() or (packets <= 0).any():
+        raise ValueError(f"trace {path!r}: work and packets must be > 0")
+    tiers = (rows[:, 3].astype(np.int32) if n_cols == 4
+             else np.zeros(rows.shape[0], np.int32))
+    constraints = Constraints()
+    if constraints_path is not None:
+        constraints = _load_sidecar(constraints_path)
+    trace = TraceSchema(t_arrive=t, works=works, packets=packets,
+                        priority=tiers, constraints=constraints)
+    if horizon is not None:
+        trace = trace.clipped(horizon)
+    return trace
+
+
+def _load_sidecar(path) -> Constraints:
+    d = json.loads(Path(path).read_text())
+    names = tuple(d.get("attr_names", ()))
+    idx = {a: i for i, a in enumerate(names)}
+    rows = d.get("rows", ())
+    task, attr, op, value = [], [], [], []
+    for r in rows:
+        tid, a, o, v = r
+        if a not in idx:
+            raise ValueError(f"constraints sidecar {path!r}: attribute "
+                             f"{a!r} not in attr_names {sorted(idx)}")
+        if o not in OPS:
+            raise ValueError(f"constraints sidecar {path!r}: unknown op "
+                             f"{o!r}; have {sorted(OPS)}")
+        task.append(int(tid))
+        attr.append(idx[a])
+        op.append(OPS[o])
+        value.append(float(v))
+    return Constraints(names, task, attr, op, value)
+
+
+def write_normalized_csv(trace: TraceSchema, path, *,
+                         constraints_path=None) -> None:
+    """Inverse of :func:`load_normalized_csv` (the ``repro.lab trace
+    --out`` conversion target)."""
+    with open(path, "w") as fh:
+        fh.write("# t_arrive,work,packets,priority\n")
+        for i in range(trace.m):
+            fh.write(f"{trace.t_arrive[i]:.9g},{trace.works[i]:.9g},"
+                     f"{trace.packets[i]:.9g},{int(trace.priority[i])}\n")
+    if constraints_path is not None and not trace.constraints.empty:
+        from .schema import OP_NAMES
+        c = trace.constraints
+        payload = {
+            "attr_names": list(c.attr_names),
+            "rows": [[int(c.task[j]), c.attr_names[c.attr[j]],
+                      OP_NAMES[int(c.op[j])], float(c.value[j])]
+                     for j in range(c.k)],
+        }
+        Path(constraints_path).write_text(json.dumps(payload, indent=2)
+                                          + "\n")

@@ -1,0 +1,251 @@
+"""The normalized trace schema: priorities and placement constraints.
+
+Every trace format (Google cluster-data task events, Azure Packing Trace,
+the repo's own normalized CSV) parses into one :class:`TraceSchema` — a
+:class:`repro.runtime.workload.Workload` extended with two new per-task
+axes the paper's synthetic workloads do not have:
+
+* ``priority`` — int tiers, **tier 0 = most important**. Parsers remap
+  native priority scales (Google: bigger number = more important; Azure:
+  1 = high, 0 = spot) onto dense ascending tiers so downstream code never
+  needs format knowledge. Tiers order admission within an arrival batch
+  and per-node queue service (nonpreemptive — a started task finishes).
+* ``constraints`` — sparse node-attribute predicates, e.g.
+  ``machine_class >= 2``. A task may carry any number of predicates; a
+  node is *feasible* for a task iff it satisfies all of them. Constraints
+  reference cluster attributes by name and are resolved against the
+  cluster's attribute table (``lab.ClusterSpec(attrs=...)``) at run time.
+
+Feasibility evaluation is vectorized: predicates are grouped by their
+``(attr, op, value)`` signature, each signature is evaluated once against
+all nodes, and the per-task AND is a grouped scatter — million-task masks
+cost milliseconds, not minutes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..runtime.workload import Workload
+
+__all__ = [
+    "OPS",
+    "OP_NAMES",
+    "Constraints",
+    "TraceSchema",
+    "InfeasibleTaskError",
+    "dense_tiers",
+]
+
+# predicate operator codes (Google task_constraints uses 0-3; <=/>= are
+# the natural spellings for threshold attributes like machine class)
+OPS = {"==": 0, "!=": 1, "<": 2, ">": 3, "<=": 4, ">=": 5}
+OP_NAMES = {v: k for k, v in OPS.items()}
+
+_OP_FNS = {
+    0: np.equal,
+    1: np.not_equal,
+    2: np.less,
+    3: np.greater,
+    4: np.less_equal,
+    5: np.greater_equal,
+}
+
+
+class InfeasibleTaskError(ValueError):
+    """A task's constraints exclude every node in the cluster — surfaced
+    as a diagnostic naming the task and its predicates, never a hang."""
+
+
+@dataclass(frozen=True)
+class Constraints:
+    """Sparse per-task predicates: row ``j`` says task ``task[j]`` requires
+    ``attrs[attr_names[attr[j]]] <op[j]> value[j]`` on its node.
+
+    ``attr_names`` holds the attribute vocabulary this constraint set
+    references; ``attr`` indexes into it. A task absent from ``task`` is
+    unconstrained (feasible everywhere).
+    """
+
+    attr_names: tuple[str, ...] = ()
+    task: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    attr: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    op: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int8))
+    value: np.ndarray = field(default_factory=lambda: np.zeros(0, np.float64))
+
+    def __post_init__(self):
+        object.__setattr__(self, "attr_names",
+                           tuple(str(a) for a in self.attr_names))
+        object.__setattr__(self, "task",
+                           np.asarray(self.task, dtype=np.int64))
+        object.__setattr__(self, "attr",
+                           np.asarray(self.attr, dtype=np.int32))
+        object.__setattr__(self, "op", np.asarray(self.op, dtype=np.int8))
+        object.__setattr__(self, "value",
+                           np.asarray(self.value, dtype=np.float64))
+        k = self.task.shape[0]
+        for name in ("attr", "op", "value"):
+            if getattr(self, name).shape[0] != k:
+                raise ValueError("constraint columns must share one length")
+        if k:
+            if self.attr.min() < 0 or self.attr.max() >= len(self.attr_names):
+                raise ValueError("constraint attr index out of range")
+            bad = set(np.unique(self.op)) - set(_OP_FNS)
+            if bad:
+                raise ValueError(f"unknown constraint op codes {sorted(bad)}")
+
+    @property
+    def k(self) -> int:
+        return int(self.task.shape[0])
+
+    @property
+    def empty(self) -> bool:
+        return self.k == 0
+
+    def describe_task(self, tid: int) -> str:
+        """Human-readable predicate list for one task (diagnostics)."""
+        rows = np.flatnonzero(self.task == tid)
+        if rows.size == 0:
+            return "(unconstrained)"
+        return " AND ".join(
+            f"{self.attr_names[self.attr[j]]} "
+            f"{OP_NAMES[int(self.op[j])]} {self.value[j]:g}"
+            for j in rows)
+
+    def select(self, tasks: np.ndarray) -> "Constraints":
+        """Constraint rows for a resampled task list: new task ``i`` inherits
+        the rows of source task ``tasks[i]`` (duplicates copy their rows)."""
+        tasks = np.asarray(tasks, dtype=np.int64)
+        if self.empty:
+            return Constraints(self.attr_names)
+        order = np.argsort(self.task, kind="stable")
+        srt = self.task[order]
+        start = np.searchsorted(srt, tasks, side="left")
+        stop = np.searchsorted(srt, tasks, side="right")
+        cnt = stop - start
+        total = int(cnt.sum())
+        if total == 0:
+            return Constraints(self.attr_names)
+        new_task = np.repeat(np.arange(tasks.shape[0], dtype=np.int64), cnt)
+        base = np.repeat(start, cnt)
+        offs = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+        rows = order[base + offs]
+        return Constraints(self.attr_names, new_task, self.attr[rows],
+                           self.op[rows], self.value[rows])
+
+    def node_mask(self, m: int, attr_names, attr_matrix) -> np.ndarray:
+        """``(m, n)`` feasibility: node ``j`` satisfies all of task ``i``'s
+        predicates. ``attr_matrix`` is the cluster's ``(n, A)`` attribute
+        table with columns named by ``attr_names``. Referencing an
+        attribute the cluster does not declare is a loud error — silently
+        treating it as unsatisfiable would look like a scheduling bug."""
+        attr_matrix = np.asarray(attr_matrix, dtype=np.float64)
+        n = attr_matrix.shape[0]
+        mask = np.ones((m, n), dtype=bool)
+        if self.empty:
+            return mask
+        col = {name: j for j, name in enumerate(attr_names)}
+        missing = [a for a in self.attr_names if a not in col]
+        if missing:
+            raise InfeasibleTaskError(
+                f"trace constraints reference cluster attributes "
+                f"{sorted(missing)} but the cluster declares "
+                f"{sorted(col) or 'none'}; add them via "
+                f"ClusterSpec(attrs={{...}})")
+        # evaluate each distinct (attr, op, value) signature once over all
+        # nodes, then AND it into every task carrying that signature
+        sig = np.stack([self.attr.astype(np.int64),
+                        self.op.astype(np.int64),
+                        self.value.view(np.int64)], axis=1)
+        uniq, inv = np.unique(sig, axis=0, return_inverse=True)
+        for u in range(uniq.shape[0]):
+            a = int(uniq[u, 0])
+            o = int(uniq[u, 1])
+            v = float(np.asarray(uniq[u, 2], dtype=np.int64)
+                      .view(np.float64))
+            sat = _OP_FNS[o](attr_matrix[:, col[self.attr_names[a]]], v)
+            rows = inv == u
+            np.logical_and.at(mask, self.task[rows], sat[None, :])
+        return mask
+
+
+def dense_tiers(raw: np.ndarray, *, higher_is_more_important: bool
+                ) -> np.ndarray:
+    """Remap a native priority column onto dense tiers 0..T-1 with tier 0
+    the most important, preserving the native ordering."""
+    raw = np.asarray(raw)
+    values = np.unique(raw)  # ascending
+    if higher_is_more_important:
+        values = values[::-1]
+    rank = {v: i for i, v in enumerate(values.tolist())}
+    return np.array([rank[v] for v in raw.tolist()], dtype=np.int32)
+
+
+@dataclass(frozen=True)
+class TraceSchema(Workload):
+    """A :class:`Workload` with priority tiers and placement constraints.
+
+    Plain-``Workload`` consumers (the batched fluid backend, ``to_slots``)
+    see the base fields unchanged; priority/constraint awareness is opt-in
+    via ``isinstance`` or the ``constrained``/``n_tiers`` properties.
+    """
+
+    priority: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    constraints: Constraints = field(default_factory=Constraints)
+
+    def __post_init__(self):
+        super().__post_init__()
+        pr = np.asarray(self.priority, dtype=np.int32)
+        if pr.shape[0] == 0 and self.m:
+            pr = np.zeros(self.m, dtype=np.int32)
+        if pr.shape[0] != self.m:
+            raise ValueError(
+                f"priority has {pr.shape[0]} entries for {self.m} tasks")
+        if pr.size and pr.min() < 0:
+            raise ValueError("priority tiers must be >= 0")
+        object.__setattr__(self, "priority", pr)
+        c = self.constraints
+        if not isinstance(c, Constraints):
+            raise TypeError("constraints must be a Constraints instance")
+        if not c.empty and (c.task.min() < 0 or c.task.max() >= self.m):
+            raise ValueError("constraint rows reference tasks outside the "
+                             f"trace (m={self.m})")
+
+    @property
+    def n_tiers(self) -> int:
+        return int(self.priority.max()) + 1 if self.m else 0
+
+    @property
+    def constrained(self) -> bool:
+        return not self.constraints.empty
+
+    def clipped(self, horizon: float) -> "TraceSchema":
+        """Tasks arriving before ``horizon`` (constraint rows re-indexed)."""
+        keep = self.t_arrive < horizon
+        idx = np.flatnonzero(keep)
+        return TraceSchema(
+            t_arrive=self.t_arrive[keep], works=self.works[keep],
+            packets=self.packets[keep], priority=self.priority[keep],
+            constraints=self.constraints.select(idx))
+
+    def feasibility(self, attr_names, attr_matrix) -> np.ndarray:
+        """Per-task node feasibility ``(m, n)`` against a cluster attribute
+        table; raises :class:`InfeasibleTaskError` naming the first task no
+        node can satisfy (the diagnostic contract: never a silent hang)."""
+        mask = self.constraints.node_mask(self.m, attr_names, attr_matrix)
+        dead = np.flatnonzero(~mask.any(axis=1))
+        if dead.size:
+            t = int(dead[0])
+            raise InfeasibleTaskError(
+                f"{dead.size} task(s) have constraints no node satisfies; "
+                f"first: task {t} requires "
+                f"{self.constraints.describe_task(t)} but no node's "
+                f"attributes match")
+        return mask
+
+    def tier_counts(self) -> dict[int, int]:
+        tiers, counts = np.unique(self.priority, return_counts=True)
+        return {int(t): int(c) for t, c in zip(tiers, counts)}
