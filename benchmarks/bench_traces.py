@@ -55,15 +55,19 @@ def _base(policy: str, mode: str) -> lab.Scenario:
 
 def trace_ingest() -> list[tuple[str, float, str]]:
     from repro.traces import load_google_task_events
+    from repro.traces.io import iter_text_chunks
     t0 = time.perf_counter()
     tr = load_google_task_events(EXCERPT, constraints_path=CONSTRAINTS)
     us = (time.perf_counter() - t0) * 1e6
-    rows = tr.m * 3  # submit/schedule/finish per task
+    # actual event-row count (evicted tasks carry extra SCHEDULE/EVICT rows)
+    rows = sum(text.count("\n") for text in iter_text_chunks(EXCERPT))
     return [(
         "traces/ingest/google_10k", us,
         f"tasks={tr.m};event_rows={rows};"
         f"rows_per_s={rows / (us / 1e6):.0f};"
-        f"tiers={tr.n_tiers};constraint_rows={tr.constraints.k}")]
+        f"tiers={tr.n_tiers};constraint_rows={tr.constraints.k};"
+        f"eviction_rows={tr.evictions.k};"
+        f"ends_evicted={int(tr.ends_evicted.sum())}")]
 
 
 def constrained_grid() -> list[tuple[str, float, str]]:

@@ -36,12 +36,14 @@ LOWER_IS_BETTER = (
     "tier0_wait",      # constrained-trace priority-0 wait (PR 4)
     "tier0_p99",
     "worst_tier_wait",
+    "wasted_work",     # service burned by eviction/failure churn (PR 5)
     "us_per_call",  # only with --include-timing
 )
 HIGHER_IS_BETTER = (
     "speedup",
     "isolated_over_full",
     "tier0_improvement",  # constrained PSTS vs blind dispatch margin
+    "waste_improvement",  # PSTS vs arrival-only wasted work margin (PR 5)
 )
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = 1e-9

@@ -1,5 +1,6 @@
 """Regenerate the bundled trace excerpt (``google_excerpt_10k.csv.gz`` +
-``google_excerpt_10k_constraints.csv.gz``).
+``google_excerpt_10k_constraints.csv.gz`` +
+``google_excerpt_10k_machine_events.csv.gz``).
 
 A committed, deterministic 10k-task excerpt in the Google cluster-data v2
 task-events format, shaped like the public trace where it matters for the
@@ -12,8 +13,16 @@ scheduling benchmarks:
   production,
 * production (tier-0) tasks constrained ``machine_class >= 2`` via a
   companion task_constraints table — the placement-constraint dimension,
-* per-task SUBMIT/SCHEDULE/FINISH event rows, shard-shuffled so parsers
-  must cope with out-of-order rows.
+* **eviction churn** (PR 5): a slice of tasks — overwhelmingly gratis and
+  mid tier, like the public trace — lives through repeated
+  SCHEDULE -> EVICT -> resubmit cycles before its final successful run,
+  and a small tail ends in an EVICT with no FINISH at all. In
+  ``eviction_mode="requeue"`` these replay as exogenous preemptions; in
+  ``"end"`` mode they truncate the interval as before,
+* **machine_events companion** (PR 5): 16 machines with mid-trace
+  REMOVE/ADD cycles and capacity UPDATEs, replayed as the fault schedule,
+* per-task event rows, shard-shuffled so parsers must cope with
+  out-of-order rows.
 
 Run from the repo root::
 
@@ -64,14 +73,37 @@ def main() -> None:
     rng = np.random.default_rng(SEED)
     times, job, pri, cpu, mem, dur = generate(rng)
     m = times.shape[0]
+    # eviction churn, Google-shaped: gratis tasks are preempted often,
+    # production almost never. An evicted task lives through 1-3
+    # SCHEDULE -> run a while -> EVICT -> resubmit-delay cycles before its
+    # final successful run — a slow-draining replay stays exposed to the
+    # whole sequence, a fast one outruns it.
+    p_evict = np.where(pri >= 9, 0.03, np.where(pri >= 4, 0.20, 0.55))
+    evicted = rng.uniform(size=m) < p_evict
+    ends_evicted = rng.uniform(size=m) < 0.015  # never finishes at all
+    n_ev_rows = 0
     rows = []
     for i in range(m):
         t0 = int(times[i] * 1e6)
         t1 = t0 + int(rng.uniform(0.05, 0.5) * 1e6)      # queue -> schedule
-        t2 = t1 + int(dur[i] * 1e6)                       # schedule -> finish
         common = f"{job[i]},0,,{{ev}},user,0,{pri[i]},{cpu[i]},{mem[i]},"
         rows.append(f"{t0},,{common.format(ev=0)}")
         rows.append(f"{t1},,{common.format(ev=1)}")
+        if ends_evicted[i]:  # SCHEDULE then a terminal EVICT, no FINISH
+            te = t1 + int(rng.uniform(1.0, 10.0) * 1e6)
+            rows.append(f"{te},,{common.format(ev=2)}")
+            n_ev_rows += 1
+            continue
+        t_sched = t1
+        if evicted[i]:
+            for _ in range(int(rng.integers(1, 4))):
+                te = t_sched + int(rng.uniform(2.0, 20.0) * 1e6)
+                rows.append(f"{te},,{common.format(ev=2)}")
+                n_ev_rows += 1
+                # resubmission lands it back in the queue a while later
+                t_sched = te + int(rng.uniform(5.0, 25.0) * 1e6)
+                rows.append(f"{t_sched},,{common.format(ev=1)}")
+        t2 = t_sched + int(dur[i] * 1e6)                  # final run
         rows.append(f"{t2},,{common.format(ev=4)}")
     # shard-shuffle: rows arrive interleaved, not time-sorted
     order = rng.permutation(len(rows))
@@ -91,8 +123,22 @@ def main() -> None:
     con = [f"{int(times[i] * 1e6)},{job[i]},0,3,machine_class,1"
            for i in range(m) if pri[i] >= 9]
     write_gz("google_excerpt_10k_constraints.csv.gz", "\n".join(con) + "\n")
-    print(f"wrote {m} tasks ({len(rows)} event rows, {len(con)} "
-          f"constraint rows)")
+
+    # machine_events companion: 16 machines (the benchmark cluster), all
+    # up at t=0, with mid-trace remove/re-add cycles and capacity UPDATEs
+    mach = [f"0,{100 + i},0,,1.0,0.5" for i in range(16)]
+    mach += [
+        "400000000,107,2,,0.5,0.5",    # machine 7 halves at t=400s
+        "600000000,103,1,,,",          # machine 3 dies at t=600s
+        "900000000,103,0,,1.0,0.5",    # ... and rejoins at t=900s
+        "1000000000,112,1,,,",         # machine 12 dies at t=1000s
+        "1200000000,112,0,,1.0,0.5",   # ... rejoins at t=1200s
+        "1400000000,107,2,,1.0,0.5",   # machine 7 back to full at t=1400s
+    ]
+    write_gz("google_excerpt_10k_machine_events.csv.gz",
+             "\n".join(mach) + "\n")
+    print(f"wrote {m} tasks ({len(rows)} event rows, {n_ev_rows} eviction "
+          f"rows, {len(con)} constraint rows, {len(mach)} machine events)")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,11 @@ def _suites():
         suites.append(("fidelity", bench_fidelity.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_evictions
+        suites.append(("evictions", bench_evictions.ALL))
+    except ImportError:
+        pass
     return suites
 
 

@@ -129,6 +129,10 @@ class FederatedBackend(Backend):
         agg["restarts"] = sum(r["restarts"] for r in results)
         agg["failures"] = sum(r["failures"] for r in results)
         agg["joins"] = sum(r["joins"] for r in results)
+        agg["resizes"] = sum(r["resizes"] for r in results)
+        agg["evictions"] = sum(r["evictions"] for r in results)
+        agg["wasted_work"] = sum(r["wasted_work"] for r in results)
+        agg["admitted_work"] = sum(r["admitted_work"] for r in results)
         # p99/mean_wait stay None: the fluid batch keeps no per-task
         # response sample to pool across members
         return RunResult(

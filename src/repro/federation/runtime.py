@@ -14,7 +14,16 @@ with WAN constants.
 Conservation is checked every epoch (scheduled = completed + queued +
 running + in flight, across all members and the WAN) and at the end (all
 tasks done, moved work sent equals work landed), so a federation bug cannot
-silently duplicate or leak tasks.
+silently duplicate or leak tasks. :meth:`FederatedRuntime.work_census`
+extends the audit to work units (admitted == completed + in flight,
+federation-wide, with wasted service accounted on top).
+
+Churn replay: each member replays its own trace eviction stream and
+machine_events schedule in lockstep with the rest (both are ordinary events
+in the member's queue). Eviction events are addressed by task id *within
+the owning member*, so a task handed off over the WAN escapes its origin's
+remaining evictions — the destination cluster's churn, not the source's,
+governs it from then on.
 """
 
 from __future__ import annotations
@@ -23,6 +32,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..lab.specs import resolve_fault_schedule
 from ..runtime.metrics import Metrics
 from ..runtime.runtime import ClusterRuntime
 from .balancer import ExchangeStats, admit, choose_destination
@@ -49,6 +59,11 @@ def aggregate_metrics(members: list[Metrics]) -> Metrics:
         agg.restarts += m.restarts
         agg.failures += m.failures
         agg.joins += m.joins
+        agg.resizes += m.resizes
+        agg.evictions += m.evictions
+        agg.admitted_work += m.admitted_work
+        agg.completed_work += m.completed_work
+        agg.wasted_work += m.wasted_work
         agg.makespan = max(agg.makespan, m.makespan)
         agg.responses.extend(m.responses)
         agg.waits.extend(m.waits)
@@ -86,8 +101,12 @@ class FederatedRuntime:
                 node_attrs=member.cluster.resolve_attrs(),
                 constraint_blind=member.policy.constraint_mode == "blind")
             wl = member.workload.materialize(member.seed)
-            rt.schedule_workload(wl, failures=member.faults.failures,
-                                 joins=member.faults.joins,
+            # each member replays its own churn in lockstep with the rest:
+            # declared faults merged with its trace's machine_events, and
+            # the trace's eviction stream scheduled inside schedule_workload
+            failures, joins, resizes = resolve_fault_schedule(member)
+            rt.schedule_workload(wl, failures=failures, joins=joins,
+                                 resizes=resizes,
                                  tid_base=self._scheduled)
             self._scheduled += wl.m
             self.runtimes.append(rt)
@@ -159,6 +178,25 @@ class FederatedRuntime:
                 loads[src] -= task.work
                 loads[dst] += task.work
                 surplus -= task.work
+
+    def work_census(self, t: float) -> dict:
+        """Federation-wide work-unit audit at epoch boundary ``t``: member
+        censuses summed, plus WAN transfers still in flight (which sit in
+        no member's queues yet). Member-level ``conservation_gap`` is not
+        meaningful under WAN exchange — a hand-off moves admitted work
+        between members — but the federation-wide identity
+        ``admitted == completed + in_flight`` must always hold."""
+        agg = {"admitted": 0.0, "completed": 0.0, "wasted": 0.0,
+               "in_flight": 0.0}
+        for rt in self.runtimes:
+            c = rt.work_census(t)
+            for key in agg:
+                agg[key] += c[key]
+        agg["in_flight"] += sum(w for tl, _, w in self._wan_inflight
+                                if tl > t)
+        agg["conservation_gap"] = abs(
+            agg["admitted"] - agg["completed"] - agg["in_flight"])
+        return agg
 
     # -- invariants ---------------------------------------------------------
     def _check_conservation(self, where: str) -> None:

@@ -38,6 +38,7 @@ from .specs import (
     Scenario,
     TraceRef,
     WorkloadSpec,
+    resolve_fault_schedule,
 )
 
 __all__ = [
@@ -45,7 +46,7 @@ __all__ = [
     "BACKENDS", "BATCHED_POLICIES", "Backend", "BackendError", "get_backend",
     "METRIC_SCHEMA", "RunResult", "make_metrics",
     "ClusterSpec", "FaultSpec", "PolicySpec", "Scenario", "TraceRef",
-    "WorkloadSpec",
+    "WorkloadSpec", "resolve_fault_schedule",
     "Federation", "LinkSpec", "TopologySpec",
 ]
 

@@ -31,7 +31,7 @@ from ..core.simulator import SimConfig, simulate
 from ..core.trigger import CrossoverTrigger
 from ..runtime.policies import PstsPolicy
 from .result import RunResult, make_metrics
-from .specs import Scenario
+from .specs import Scenario, resolve_fault_schedule
 
 __all__ = [
     "Backend",
@@ -138,12 +138,17 @@ def _fault_nodes_in_range(scenario: Scenario) -> str | None:
     for t, node in scenario.faults.failures + scenario.faults.joins:
         if not 0 <= node < n:
             return f"fault event at t={t} names node {node} outside 0..{n - 1}"
+    for t, node, _ in scenario.faults.resizes:
+        if not 0 <= node < n:
+            return (f"resize event at t={t} names node {node} outside "
+                    f"0..{n - 1}")
     return None
 
 
 def _trace_problem(scenario: Scenario) -> str | None:
-    """A missing/unparseable trace file must be an eligibility reason, not
-    a mid-run traceback after the 'backends' report said eligible."""
+    """A missing/unparseable trace (or machine_events companion) must be an
+    eligibility reason, not a mid-run traceback after the 'backends' report
+    said eligible."""
     if not scenario.workload.is_trace:
         return None
     label = (scenario.workload.trace_path
@@ -152,6 +157,19 @@ def _trace_problem(scenario: Scenario) -> str | None:
         scenario.workload.materialize(scenario.seed)
     except Exception as exc:  # noqa: BLE001 — surface any load failure
         return f"trace {label!r} unreadable: {exc}"
+    trace = scenario.workload.trace
+    if trace is not None and trace.machine_events:
+        wl = scenario.workload.materialize(scenario.seed)
+        try:
+            sched = trace.load_machine_events(
+                t_zero=getattr(wl, "t_zero_raw", 0.0))
+        except Exception as exc:  # noqa: BLE001
+            return (f"machine_events {trace.machine_events!r} unreadable: "
+                    f"{exc}")
+        if sched.n_machines > scenario.cluster.size:
+            return (f"machine_events {trace.machine_events!r} describes "
+                    f"{sched.n_machines} machines but the cluster has "
+                    f"{scenario.cluster.size} nodes")
     return None
 
 
@@ -204,6 +222,7 @@ class EventsBackend(Backend):
             raise TypeError(f"events backend takes no options: "
                             f"{sorted(options)}")
         wl = scenario.workload.materialize(scenario.seed)
+        failures, joins, resizes = resolve_fault_schedule(scenario)
         rt = ClusterRuntime(
             scenario.cluster.resolve_powers(), scenario.policy.name,
             d=scenario.cluster.d,
@@ -213,8 +232,7 @@ class EventsBackend(Backend):
             policy_kwargs=dict(scenario.policy.params),
             node_attrs=scenario.cluster.resolve_attrs(),
             constraint_blind=scenario.policy.constraint_mode == "blind")
-        m = rt.run(wl, failures=scenario.faults.failures,
-                   joins=scenario.faults.joins)
+        m = rt.run(wl, failures=failures, joins=joins, resizes=resizes)
         options = {"model": "discrete-event"}
         if scenario.workload.m_tasks is not None:
             # the realized arrival process decides the count here
@@ -229,6 +247,14 @@ class EventsBackend(Backend):
             }
             extras["tier_counts"] = {
                 str(t): c for t, c in wl.tier_counts().items()}
+        if isinstance(wl, TraceSchema) and (wl.preempted
+                                            or wl.ends_evicted.any()):
+            # end-of-run work audit for churn replays: everything admitted
+            # is completed, and the waste the churn burned is on record
+            extras["work_census"] = {
+                k: v for k, v in rt.work_census().items()
+                if k in ("admitted", "completed", "wasted",
+                         "in_flight", "conservation_gap")}
         return RunResult(
             fingerprint=scenario.fingerprint(), backend=self.name,
             backend_options=options,
@@ -268,10 +294,16 @@ class BatchedBackend(Backend):
                         "fluid model has no per-task node identity to "
                         "enforce a feasibility mask — run on the events "
                         "backend")
+            if isinstance(wl, TraceSchema) and wl.preempted:
+                return ("trace carries eviction (requeue) events; the "
+                        "fluid model has no per-task identity to preempt "
+                        "— run on the events backend, or parse with "
+                        "eviction_mode='end'")
+        failures, joins, _ = resolve_fault_schedule(scenario)
         failed_at: dict[int, float] = {}
-        for t, node in sorted(scenario.faults.failures):
+        for t, node in sorted(failures):
             failed_at.setdefault(node, t)
-        for t, node in scenario.faults.joins:
+        for t, node in joins:
             if node not in failed_at or failed_at[node] >= t:
                 return (f"join of node {node} at t={t} has no earlier "
                         f"failure; the batched backend models faults as a "
@@ -281,8 +313,8 @@ class BatchedBackend(Backend):
         n = scenario.cluster.size
         down: set[int] = set()
         for t, node, up in sorted(
-                [(t, nd, False) for t, nd in scenario.faults.failures]
-                + [(t, nd, True) for t, nd in scenario.faults.joins]):
+                [(t, nd, False) for t, nd in failures]
+                + [(t, nd, True) for t, nd in joins]):
             down.discard(node) if up else down.add(node)
             if len(down) == n:
                 return (f"all {n} nodes down at t={t}; the fluid model "
@@ -341,22 +373,36 @@ class BatchedBackend(Backend):
 
     @staticmethod
     def _power_scale(scenario, n_slots, n, dt):
-        if scenario.faults.empty:
+        failures, joins, resizes = resolve_fault_schedule(scenario)
+        if not (failures or joins or resizes):
             return None
         scale = np.ones((n_slots, n))
+        # fold up/down state and the resize fraction separately: a node
+        # that fails at fraction 0.5 rejoins at 0.5, like the event engine
         events = sorted(
-            [(t, node, 0.0) for t, node in scenario.faults.failures]
-            + [(t, node, 1.0) for t, node in scenario.faults.joins])
-        for t, node, value in events:
+            [(t, node, "fail", 0.0) for t, node in failures]
+            + [(t, node, "join", 1.0) for t, node in joins]
+            + [(t, node, "resize", f) for t, node, f in resizes])
+        up = np.ones(n, dtype=bool)
+        frac = np.ones(n)
+        for t, node, kind, value in events:
+            if kind == "fail":
+                up[node] = False
+            elif kind == "join":
+                up[node] = True
+            else:  # resize; resolve_fault_schedule guarantees value > 0
+                frac[node] = value
             # epsilon-guarded floor: 40.0 // 0.1 is 399 in floats, but the
             # event belongs to the slot containing t (slot 400)
             s = min(max(int(math.floor(t / dt + 1e-9)), 0), n_slots)
-            scale[s:, node] = value
+            scale[s:, node] = frac[node] if up[node] else 0.0
         return scale
 
-    def _result(self, scenario, bm, i, cfg, extra_ignored=()):
+    def _result(self, scenario, bm, i, cfg, fault_counts, extra_ignored=(),
+                admitted_work=None):
         count = int(bm.completed[i])
         moved_units = float(bm.moved_units[i])
+        n_failures, n_joins, n_resizes = fault_counts
         metrics = make_metrics(
             arrived=count, completed=count,
             makespan=float(bm.makespan[i]),
@@ -367,8 +413,12 @@ class BatchedBackend(Backend):
             trigger_evals=cfg.n_slots if cfg.rebalance else 0,
             trigger_fires=int(bm.trigger_fires[i]),
             restarts=0,
-            failures=len(scenario.faults.failures),
-            joins=len(scenario.faults.joins))
+            failures=n_failures,
+            joins=n_joins,
+            resizes=n_resizes,
+            # the fluid model preempts nothing and never loses progress
+            evictions=0, wasted_work=0.0,
+            admitted_work=admitted_work)
         return RunResult(
             fingerprint=scenario.fingerprint(), backend=self.name,
             backend_options={
@@ -406,6 +456,10 @@ class BatchedBackend(Backend):
             raise BackendError(f"batched backend: dt must be > 0, got {dt}")
         slot, works, powers, cfg, scale = self.compile(scenarios, dt)
         bm = simulate_batch(slot, works, powers, cfg, power_scale=scale)
+        # one resolution for the whole batch: compile() enforced that the
+        # scenarios share one fault schedule (only seed/name differ)
+        fault_counts = tuple(
+            len(evs) for evs in resolve_fault_schedule(scenarios[0]))
         extra_ignored = []
         if scenarios[0].workload.is_trace:
             from ..traces import TraceSchema
@@ -414,7 +468,13 @@ class BatchedBackend(Backend):
                 # the fluid model has no task ordering, so tiers cannot
                 # affect it — flagged, not rejected
                 extra_ignored.append("workload trace priorities")
-        return [self._result(sc, bm, i, cfg, extra_ignored)
+            if isinstance(wl, TraceSchema) and wl.ends_evicted.any():
+                # end-mode eviction outcomes are per-task flags the fluid
+                # model cannot count — flagged, not rejected
+                extra_ignored.append(
+                    "workload trace eviction outcomes (ends_evicted)")
+        return [self._result(sc, bm, i, cfg, fault_counts, extra_ignored,
+                             admitted_work=float(works[i].sum()))
                 for i, sc in enumerate(scenarios)]
 
 
@@ -475,7 +535,8 @@ class LegacyBackend(Backend):
             moved_units=r.moved_units,
             trigger_evals=1,
             trigger_fires=int(r.moved_tasks > 0),
-            restarts=0, failures=0, joins=0)
+            restarts=0, failures=0, joins=0, resizes=0,
+            evictions=0, wasted_work=0.0)
         trig = CrossoverTrigger(
             embed(powers, d), p=cfg.p, q=cfg.q, t_task=cfg.t_task,
             packets_per_step=cfg.packets_per_step)

@@ -162,13 +162,23 @@ def _table(results) -> None:
 
 
 def _trace_cmd(args) -> int:
-    from ..traces import load_trace, write_normalized_csv
+    from ..traces import (
+        load_google_machine_events,
+        load_trace,
+        write_normalized_csv,
+    )
     params = {}
     for item in args.param:
         if "=" not in item:
             raise SystemExit(f"--param {item!r}: expected K=V")
         k, v = item.split("=", 1)
         params[k] = _parse_value(v)
+    if args.eviction_mode is not None:
+        if args.format != "google":
+            raise SystemExit("--eviction-mode applies to --format google "
+                             "(EVICT/KILL/FAIL rows); other formats carry "
+                             "no eviction events")
+        params["eviction_mode"] = args.eviction_mode
     trace = load_trace(args.path, format=args.format, params=params,
                        scale=args.scale, seed=args.seed)
     span = trace.horizon - (float(trace.t_arrive[0]) if trace.m else 0.0)
@@ -183,12 +193,26 @@ def _trace_cmd(args) -> int:
     c = trace.constraints
     print(f"constraints  {c.k} row(s)"
           + (f" over attrs {sorted(c.attr_names)}" if c.k else ""))
+    print(f"evictions    {trace.evictions.k} requeue event(s), "
+          f"{int(trace.ends_evicted.sum())} task(s) end evicted")
+    if args.machine_events:
+        # same clock defaults as TraceRef.load_machine_events: google
+        # stamps microseconds, other formats are in plain time units —
+        # the preview must match the schedule a run would actually use
+        default_ts = 1e-6 if args.format == "google" else 1.0
+        sched = load_google_machine_events(
+            args.machine_events,
+            time_scale=float(params.get("time_scale", default_ts)),
+            t_zero=trace.t_zero_raw)
+        print(f"machines     {sched.n_machines}: "
+              f"{len(sched.failures)} failure(s), "
+              f"{len(sched.joins)} join(s), "
+              f"{len(sched.resizes)} resize(s)")
     if args.out:
-        write_normalized_csv(trace, args.out,
-                             constraints_path=args.out_constraints)
+        wrote_sidecar = write_normalized_csv(
+            trace, args.out, constraints_path=args.out_constraints)
         print(f"wrote normalized trace to {args.out}"
-              + (f" (+ {args.out_constraints})"
-                 if args.out_constraints and not c.empty else ""))
+              + (f" (+ {args.out_constraints})" if wrote_sidecar else ""))
     return 0
 
 
@@ -236,6 +260,16 @@ def main(argv: list[str] | None = None) -> int:
     p_tr.add_argument("--param", action="append", default=[],
                       metavar="K=V", help="parser kwarg, e.g. "
                       "constraints_path=FILE or time_scale=1e-6")
+    from ..traces import EVICTION_MODES
+    p_tr.add_argument("--eviction-mode", default=None,
+                      choices=sorted(EVICTION_MODES),
+                      help="google format: replay EVICT/KILL/FAIL rows as "
+                      "requeue events ('requeue', default) or let them end "
+                      "the service interval ('end', the pre-eviction-replay "
+                      "behavior)")
+    p_tr.add_argument("--machine-events", default=None, metavar="FILE",
+                      help="google machine_events companion: print its "
+                      "capacity churn as a failure/join/resize schedule")
     p_tr.add_argument("--scale", type=float, default=None,
                       help="bootstrap an Nx-rate resample (trace_scale)")
     p_tr.add_argument("--seed", type=int, default=0,

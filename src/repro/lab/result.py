@@ -32,6 +32,11 @@ METRIC_SCHEMA = (
     "restarts",
     "failures",
     "joins",
+    "resizes",
+    "evictions",
+    "admitted_work",
+    "completed_work",
+    "wasted_work",
 )
 
 

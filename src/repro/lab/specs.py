@@ -42,6 +42,7 @@ __all__ = [
     "FaultSpec",
     "PolicySpec",
     "Scenario",
+    "resolve_fault_schedule",
 ]
 
 
@@ -184,16 +185,24 @@ class TraceRef(_SpecBase):
 
     ``format`` picks the parser (``csv`` | ``google`` | ``azure``),
     ``params`` its keyword arguments (``constraints_path``,
-    ``vmtypes_path``, ``time_scale``, ...). ``scale`` bootstraps an
-    Nx-rate workload from the trace via :func:`repro.traces.trace_scale`,
-    driven by the *scenario* seed — a seed sweep over a scaled trace is a
-    real ensemble, where a raw replay ignores the seed axis entirely.
+    ``vmtypes_path``, ``eviction_mode``, ``time_scale``, ...). ``scale``
+    bootstraps an Nx-rate workload from the trace via
+    :func:`repro.traces.trace_scale`, driven by the *scenario* seed — a
+    seed sweep over a scaled trace is a real ensemble, where a raw replay
+    ignores the seed axis entirely.
+
+    ``machine_events`` names a companion Google machine_events file: its
+    capacity churn (REMOVE/ADD/UPDATE) is parsed into failure/join/resize
+    events and merged into the scenario's fault schedule at run time
+    (:func:`resolve_fault_schedule`), so a trace replay carries the
+    cluster's churn as well as its workload.
     """
 
     path: str = ""
     format: str = "csv"
     params: dict = field(default_factory=dict)
     scale: float | None = None
+    machine_events: str | None = None
 
     def __post_init__(self):
         from ..traces import TRACE_FORMATS
@@ -217,10 +226,37 @@ class TraceRef(_SpecBase):
         object.__setattr__(self, "params", _frozen_params(self.params))
 
     def side_paths(self) -> tuple[str, ...]:
-        """Companion files (constraint tables, vmType joins) whose contents
-        are part of this reference's identity."""
-        return tuple(str(v) for k, v in sorted(self.params.items())
-                     if k.endswith("_path") and v is not None)
+        """Companion files (constraint tables, vmType joins, machine
+        events) whose contents are part of this reference's identity."""
+        paths = [str(v) for k, v in sorted(self.params.items())
+                 if k.endswith("_path") and v is not None]
+        if self.machine_events:
+            paths.append(str(self.machine_events))
+        return tuple(paths)
+
+    def load_machine_events(self, t_zero: float = 0.0):
+        """Parse the referenced machine_events file into a
+        :class:`repro.traces.MachineSchedule` (empty when unset). Memoized
+        on file contents alongside the trace parse. ``t_zero`` is the raw
+        timestamp the workload's clock starts at (``TraceSchema.
+        t_zero_raw``) — the Google public trace begins at 600s, and an
+        unaligned schedule would fire every capacity event late."""
+        from ..traces import MachineSchedule, load_google_machine_events
+        if not self.machine_events:
+            return MachineSchedule()
+        # google stamps microseconds; the normalized CSV is in plain time
+        # units — share the trace's own clock scaling either way
+        default_ts = 1e-6 if self.format == "google" else 1.0
+        time_scale = float(self.params.get("time_scale", default_ts))
+        key = ("machine_events", self.machine_events, time_scale,
+               float(t_zero), _file_digest(self.machine_events))
+        if key not in _PARSE_CACHE:
+            if len(_PARSE_CACHE) >= 4:
+                _PARSE_CACHE.clear()
+            _PARSE_CACHE[key] = load_google_machine_events(
+                self.machine_events, time_scale=time_scale,
+                t_zero=float(t_zero))
+        return _PARSE_CACHE[key]
 
     def load(self, seed: int):
         """Parse (and optionally rescale) the referenced trace. The
@@ -360,19 +396,27 @@ class WorkloadSpec(_SpecBase):
 
 @dataclass(frozen=True)
 class FaultSpec(_SpecBase):
-    """Node failure/rejoin schedule: ``(time, node)`` pairs."""
+    """Node failure/rejoin/resize schedule: ``failures``/``joins`` are
+    ``(time, node)`` pairs; ``resizes`` are ``(time, node, fraction)``
+    capacity changes (the node's power becomes ``fraction`` of its base
+    power — machine_events UPDATE semantics)."""
 
     failures: tuple[tuple[float, int], ...] = ()
     joins: tuple[tuple[float, int], ...] = ()
+    resizes: tuple[tuple[float, int, float], ...] = ()
 
     def __post_init__(self):
         for name in ("failures", "joins"):
             evs = tuple((float(t), int(n)) for t, n in getattr(self, name))
             object.__setattr__(self, name, evs)
+        rs = tuple((float(t), int(n), float(f)) for t, n, f in self.resizes)
+        if any(f < 0 for _, _, f in rs):
+            raise ValueError("resize fractions must be >= 0")
+        object.__setattr__(self, "resizes", rs)
 
     @property
     def empty(self) -> bool:
-        return not self.failures and not self.joins
+        return not self.failures and not self.joins and not self.resizes
 
 
 @dataclass(frozen=True)
@@ -396,6 +440,38 @@ class PolicySpec(_SpecBase):
                 f"constraint_mode must be 'aware' or 'blind', "
                 f"got {self.constraint_mode!r}")
         object.__setattr__(self, "params", _frozen_params(self.params))
+
+
+def resolve_fault_schedule(scenario) -> tuple[tuple, tuple, tuple]:
+    """The scenario's complete ``(failures, joins, resizes)`` schedule:
+    declared :class:`FaultSpec` events merged with the capacity churn of
+    the workload trace's ``machine_events`` companion (if any). Every
+    backend and the federation runtime drive engines from this resolution,
+    so declared and trace-derived churn compose instead of competing.
+
+    A resize to a non-positive fraction is a removal in disguise — it is
+    normalized into a *failure* here, so the event engine and the batched
+    power-scale lowering see one semantics (the node is down until a
+    join, which restores its last positive resize fraction), instead of
+    each backend improvising its own reading."""
+    faults = scenario.faults
+    failures = list(faults.failures)
+    joins = list(faults.joins)
+    resizes = list(faults.resizes)
+    trace = getattr(scenario.workload, "trace", None)
+    if trace is not None and trace.machine_events:
+        # align the machine clock with the workload clock: t_arrive=0 is
+        # the trace's raw t_zero (memoized materialization, already done
+        # for eligibility)
+        wl = scenario.workload.materialize(scenario.seed)
+        sched = trace.load_machine_events(
+            t_zero=getattr(wl, "t_zero_raw", 0.0))
+        failures += list(sched.failures)
+        joins += list(sched.joins)
+        resizes += list(sched.resizes)
+    failures += [(t, node) for t, node, f in resizes if f <= 0]
+    resizes = [(t, node, f) for t, node, f in resizes if f > 0]
+    return tuple(failures), tuple(joins), tuple(resizes)
 
 
 _SECTIONS = {"cluster": ClusterSpec, "workload": WorkloadSpec,

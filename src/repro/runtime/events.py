@@ -17,14 +17,23 @@ __all__ = ["EventKind", "Event", "EventQueue"]
 
 
 class EventKind(IntEnum):
-    """Tie-break order at equal timestamps (lower = earlier)."""
+    """Tie-break order at equal timestamps (lower = earlier).
+
+    Completions resolve before evictions: a task whose service ends at
+    exactly the eviction instant has, by then, done its work — evicting it
+    would waste a finished run on a timestamp tie. Resizes follow the other
+    capacity events (fail/join) so a same-instant fail-then-resize acts on
+    the post-failure grid.
+    """
 
     NODE_FAIL = 0
     NODE_JOIN = 1
-    COMPLETION = 2
-    MIGRATION_ARRIVE = 3
-    ARRIVAL = 4
-    TRIGGER_EVAL = 5
+    NODE_RESIZE = 2
+    COMPLETION = 3
+    EVICTION = 4
+    MIGRATION_ARRIVE = 5
+    ARRIVAL = 6
+    TRIGGER_EVAL = 7
 
 
 @dataclass(frozen=True)

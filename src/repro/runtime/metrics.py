@@ -43,6 +43,20 @@ class Metrics:
     restarts: int = 0
     failures: int = 0
     joins: int = 0
+    # capacity churn + preemption replay (PR 5): resize events applied,
+    # evictions observed (requeues, plus end-mode eviction-truncated
+    # "completions" — which would otherwise silently inflate throughput)
+    resizes: int = 0
+    evictions: int = 0
+    # work-unit odometers: admitted counts each task's demand once at
+    # arrival; completed_work counts it once at completion; wasted_work is
+    # service burned on attempts that lost their progress to an eviction
+    # or a failure restart. Conservation: admitted == completed_work +
+    # outstanding (ClusterRuntime.work_census), and every delivered
+    # service unit is useful, wasted, or in-progress.
+    admitted_work: float = 0.0
+    completed_work: float = 0.0
+    wasted_work: float = 0.0
     makespan: float = 0.0
     responses: list[float] = field(default_factory=list)
     waits: list[float] = field(default_factory=list)
@@ -50,12 +64,15 @@ class Metrics:
     # workloads land entirely in tier 0
     waits_by_tier: dict[int, list[float]] = field(default_factory=dict)
 
-    def observe_arrival(self) -> None:
+    def observe_arrival(self, work: float = 0.0) -> None:
         self.arrived += 1
+        self.admitted_work += float(work)
 
     def observe_completion(self, response: float, wait: float,
-                           t_finish: float, tier: int = 0) -> None:
+                           t_finish: float, tier: int = 0,
+                           work: float = 0.0) -> None:
         self.completed += 1
+        self.completed_work += float(work)
         self.responses.append(float(response))
         self.waits.append(float(wait))
         self.waits_by_tier.setdefault(int(tier), []).append(float(wait))
@@ -106,4 +123,9 @@ class Metrics:
             "restarts": self.restarts,
             "failures": self.failures,
             "joins": self.joins,
+            "resizes": self.resizes,
+            "evictions": self.evictions,
+            "admitted_work": self.admitted_work,
+            "completed_work": self.completed_work,
+            "wasted_work": self.wasted_work,
         }

@@ -14,6 +14,17 @@ re-placed through the policy (the running task restarts from scratch —
 nonpreemptive schedulers cannot checkpoint mid-task). Migrations in flight
 toward a node that died on arrival are re-placed the moment they land.
 
+Churn replay (PR 5): trace workloads may carry exogenous *eviction* events
+((task, time) rows — Google EVICT/KILL/FAIL) and the fault schedule may
+carry *resizes* ((time, node, fraction) — machine_events capacity UPDATEs).
+An eviction pulls the task off its machine, discards the interrupted
+attempt's progress (``Metrics.wasted_work``) and requeues the task through
+the normal tier-ordered admission path; a resize banks the running task's
+progress (``Task.work_done``) and continues it at the new rate. Work-unit
+conservation is auditable at any instant via :meth:`ClusterRuntime.\
+work_census`: admitted == completed + in-flight, with wasted service
+accounted on top.
+
 Every policy (``repro.runtime.policies``) runs under the identical engine and
 reports through the shared ``Metrics`` accumulator.
 """
@@ -45,6 +56,21 @@ class Task:
     t_finish: float | None = None
     restarts: int = 0
     migrations: int = 0
+    evictions: int = 0
+    # remaining-work bookkeeping: progress banked within the *current*
+    # service attempt (a node resize banks it and continues at the new
+    # rate); an eviction or failure restart discards it — nonpreemptive
+    # schedulers cannot checkpoint mid-task
+    work_done: float = 0.0
+    # when the current attempt entered service; survives resizes (which
+    # rebase t_start to rebase progress), so the wait metric — time from
+    # arrival to the final attempt's start — stays exact under churn
+    t_attempt_start: float | None = None
+    # invalidates in-queue COMPLETION events after a restart or resize
+    token: int = 0
+    # the trace says this task's real-cluster life ended in an eviction
+    # (end-mode replay: its completion is counted as an eviction too)
+    ends_evicted: bool = False
     # priority tier (0 = most important): orders admission within an
     # arrival batch and service within a node's queue, nonpreemptively
     priority: int = 0
@@ -87,7 +113,8 @@ class ClusterRuntime:
                  node_attrs: dict | None = None,
                  constraint_blind: bool = False):
         powers = np.asarray(powers, dtype=np.float64)
-        self._powers_full = powers.copy()
+        self._base_powers = powers.copy()   # nominal, never mutated
+        self._powers_full = powers.copy()   # current (resize-adjusted)
         self.grid = embed(powers, optimal_dim(powers.size) if d is None else d)
         self.policy = make_policy(policy, **(policy_kwargs or {}))
         self.trigger_period = float(trigger_period)
@@ -122,6 +149,12 @@ class ClusterRuntime:
         self.constraint_blind = bool(constraint_blind)
 
     # -- state inspection ---------------------------------------------------
+    def _progress(self, task: Task, node: int, t: float) -> float:
+        """Service delivered to a *running* task so far: progress banked
+        across resizes plus the current segment at the node's rate."""
+        done = task.work_done + (t - task.t_start) * self.grid.powers[node]
+        return float(min(max(done, 0.0), task.work))
+
     def loads(self, t: float) -> np.ndarray:
         """Queued work plus the remaining work of running tasks."""
         loads = np.zeros(self.grid.capacity)
@@ -130,8 +163,7 @@ class ClusterRuntime:
                 loads[n] += task.work
             r = self._running[n]
             if r is not None:
-                done = (t - r.t_start) * self.grid.powers[n]
-                loads[n] += max(r.work - done, 0.0)
+                loads[n] += r.work - self._progress(r, n, t)
         return loads
 
     def view(self, t: float,
@@ -155,6 +187,42 @@ class ClusterRuntime:
             "pending_arrivals": self._eq.pending(EventKind.ARRIVAL),
             "pending_migrations": self._eq.pending(
                 EventKind.MIGRATION_ARRIVE),
+        }
+
+    def work_census(self, t: float | None = None) -> dict:
+        """Work-unit conservation snapshot at time ``t`` (default: now).
+
+        ``admitted`` (every admitted task's demand, counted once) always
+        equals ``completed + in_flight`` — work never leaks, however much
+        eviction/failure churn replays. ``wasted`` rides on top: service
+        burned on interrupted attempts, i.e. total service demand
+        (admitted + wasted, evicted attempts redone) partitions into
+        completed + wasted + in_flight. The eviction benchmarks and the
+        conformance suite assert both identities.
+        """
+        t = self._now if t is None else float(t)
+        queued = sum(task.work for q in self._queues for task in q)
+        running_left = running_progress = 0.0
+        for n, r in enumerate(self._running):
+            if r is not None:
+                p = self._progress(r, n, t)
+                running_progress += p
+                running_left += r.work - p
+        migrating = sum(self.tasks[tid].work for tid in self._in_flight
+                        if tid in self.tasks)
+        in_flight = queued + running_left + running_progress + migrating
+        m = self.metrics
+        return {
+            "admitted": m.admitted_work,
+            "completed": m.completed_work,
+            "wasted": m.wasted_work,
+            "queued": queued,
+            "running_left": running_left,
+            "running_progress": running_progress,
+            "migrating": migrating,
+            "in_flight": in_flight,
+            "conservation_gap": abs(
+                m.admitted_work - m.completed_work - in_flight),
         }
 
     def pending_work(self) -> bool:
@@ -216,10 +284,23 @@ class ClusterRuntime:
         i = min(range(len(q)), key=lambda j: (q[j].priority, j))
         task = q.pop(i)
         task.t_start = t
+        task.t_attempt_start = t
         self._running[node] = task
-        service = task.work / self.grid.powers[node]
+        service = (task.work - task.work_done) / self.grid.powers[node]
         self._eq.push(t + service, EventKind.COMPLETION,
-                      (task, node, task.restarts))
+                      (task, node, task.token))
+
+    def _interrupt(self, task: Task, node: int, t: float) -> None:
+        """Stop a running task and discard the attempt's progress (wasted
+        work); the task owes its full demand again. Leaves the node free —
+        the caller decides where the task goes next."""
+        self.metrics.wasted_work += self._progress(task, node, t)
+        task.t_start = None
+        task.t_attempt_start = None
+        task.work_done = 0.0
+        task.token += 1
+        self._running[node] = None
+        task.node = -1
 
     def _strand(self, node: int, t: float) -> list[Task]:
         """Pull every task off a failed node; running restarts from scratch.
@@ -228,10 +309,9 @@ class ClusterRuntime:
         self._queues[node] = []
         r = self._running[node]
         if r is not None:
-            r.t_start = None
+            self._interrupt(r, node, t)
             r.restarts += 1
             self.metrics.restarts += 1
-            self._running[node] = None
             stranded.append(r)
         for task in stranded:
             task.node = -1
@@ -284,21 +364,84 @@ class ClusterRuntime:
 
     # -- event handlers -----------------------------------------------------
     def _on_arrival(self, task: Task, t: float) -> None:
-        self.metrics.observe_arrival()
+        self.metrics.observe_arrival(work=task.work)
         self.tasks[task.tid] = task
         self._place(task, t)
 
     def _on_completion(self, task: Task, node: int, token: int,
                        t: float) -> None:
-        if task.restarts != token or self._running[node] is not task:
-            return  # stale completion from before a failure
+        if task.token != token or self._running[node] is not task:
+            return  # stale completion from before a restart or resize
         self._running[node] = None
         task.t_finish = t
+        if task.ends_evicted:
+            # the trace ended this task with an EVICT/KILL/FAIL, not a
+            # FINISH: count it apart so throughput is not inflated
+            self.metrics.evictions += 1
+            task.evictions += 1
+        # wait = arrival -> start of the attempt that finished. For an
+        # unchurned task this equals response - work/power; for one whose
+        # service spanned a resize it stays exact (work/current-power no
+        # longer describes the realized service time)
+        t_started = (task.t_attempt_start if task.t_attempt_start
+                     is not None else t - task.work / self.grid.powers[node])
         self.metrics.observe_completion(
             response=t - task.t_arrive,
-            wait=(t - task.t_arrive) - task.work / self.grid.powers[node],
-            t_finish=t, tier=task.priority)
+            wait=t_started - task.t_arrive,
+            t_finish=t, tier=task.priority, work=task.work)
         self._try_start(node, t)
+
+    def _on_eviction(self, tid: int, t: float) -> None:
+        """Exogenous preemption replay: pull the task off its machine,
+        discard the interrupted attempt's progress (wasted work), and
+        requeue it through the normal admission path. Fires addressed to
+        finished, absent (withdrawn for a WAN hand-off) or in-flight tasks
+        are no-ops — the replay outran the trace's churn."""
+        task = self.tasks.get(tid)
+        if task is None or task.t_finish is not None:
+            return
+        if task.t_start is not None:  # running: the attempt is lost
+            node = task.node
+            self._interrupt(task, node, t)
+            task.evictions += 1
+            self.metrics.evictions += 1
+            self._place(task, t)
+            self._try_start(node, t)
+        elif task.node >= 0:  # queued: requeued through the policy
+            self._queues[task.node].remove(task)
+            task.node = -1
+            task.evictions += 1
+            self.metrics.evictions += 1
+            self._place(task, t)
+        # else: mid-migration — it is on no machine; nothing to reclaim
+
+    def _on_resize(self, node: int, fraction: float, t: float) -> None:
+        """Capacity change in place (machine_events UPDATE): the node's
+        power becomes ``fraction`` of its base power. A running task banks
+        its progress and continues at the new rate — unlike an eviction,
+        the machine kept the task. A non-positive fraction is a removal."""
+        if node >= self._powers_full.size or node < 0:
+            return
+        if fraction <= 0:
+            self._on_fail(node, t)
+            return
+        new_power = self._base_powers[node] * float(fraction)
+        self._powers_full[node] = new_power  # what a later join restores
+        if not self.grid.active[node]:
+            return  # applies when the node rejoins
+        self.metrics.resizes += 1
+        r = self._running[node]
+        if r is not None:  # bank progress at the old rate first
+            r.work_done = self._progress(r, node, t)
+            r.t_start = t
+            r.token += 1
+        powers = self.grid.powers.copy()
+        powers[node] = new_power
+        self.grid = HyperGrid(self.grid.dims, powers, self.grid.active)
+        if r is not None:
+            service = (r.work - r.work_done) / self.grid.powers[node]
+            self._eq.push(t + service, EventKind.COMPLETION,
+                          (r, node, r.token))
 
     def _on_migration_arrive(self, task: Task, dst: int, t: float) -> None:
         self._in_flight.discard(task.tid)
@@ -421,10 +564,11 @@ class ClusterRuntime:
 
     # -- driver -------------------------------------------------------------
     def schedule_workload(self, workload: Workload, *, failures=(),
-                          joins=(), tid_base: int = 0) -> None:
+                          joins=(), resizes=(), tid_base: int = 0) -> None:
         """Queue a workload's arrivals and fault events. ``tid_base``
         offsets task ids so several workloads (federation members) share one
-        global id space.
+        global id space. ``resizes`` are ``(time, node, fraction)`` capacity
+        changes (machine_events UPDATE rows).
 
         Trace workloads (``repro.traces.TraceSchema``) additionally carry
         priorities and constraints: same-instant arrivals are admitted best
@@ -432,11 +576,17 @@ class ClusterRuntime:
         and each constrained task gets its feasibility mask resolved here,
         once, against the cluster attribute table — a task no node can ever
         satisfy is a loud :class:`InfeasibleTaskError` before the clock
-        starts, not a hang mid-run."""
+        starts, not a hang mid-run. A trace's eviction rows become
+        :class:`EventKind.EVICTION` events addressed by task id, and its
+        ``ends_evicted`` flags ride on the tasks."""
         priority = np.asarray(
             getattr(workload, "priority", None)
             if getattr(workload, "priority", None) is not None
             else np.zeros(workload.m), dtype=np.int64)
+        ends_evicted = np.asarray(
+            getattr(workload, "ends_evicted", None)
+            if getattr(workload, "ends_evicted", None) is not None
+            else np.zeros(workload.m, dtype=bool), dtype=bool)
         masks = self._resolve_feasibility(workload)
         # stable (t, tier) order: priority decides admission within a batch
         order = np.lexsort((priority, workload.t_arrive))
@@ -447,12 +597,21 @@ class ClusterRuntime:
                                work=float(workload.works[i]),
                                packets=float(workload.packets[i]),
                                priority=int(priority[i]),
+                               ends_evicted=bool(ends_evicted[i]),
                                feasible=None if masks is None
                                else masks[i]))
+        evictions = getattr(workload, "evictions", None)
+        if evictions is not None and not evictions.empty:
+            for j in range(evictions.k):
+                self._eq.push(float(evictions.time[j]), EventKind.EVICTION,
+                              tid_base + int(evictions.task[j]))
         for t, node in failures:
             self._eq.push(t, EventKind.NODE_FAIL, int(node))
         for t, node in joins:
             self._eq.push(t, EventKind.NODE_JOIN, int(node))
+        for t, node, fraction in resizes:
+            self._eq.push(t, EventKind.NODE_RESIZE,
+                          (int(node), float(fraction)))
         if (self.policy.uses_trigger and self.trigger_period > 0
                 and not self._eq.pending(EventKind.TRIGGER_EVAL)):
             self._eq.push(self.trigger_period, EventKind.TRIGGER_EVAL)
@@ -462,12 +621,16 @@ class ClusterRuntime:
             self._on_arrival(ev.payload, ev.time)
         elif ev.kind == EventKind.COMPLETION:
             self._on_completion(*ev.payload, ev.time)
+        elif ev.kind == EventKind.EVICTION:
+            self._on_eviction(ev.payload, ev.time)
         elif ev.kind == EventKind.MIGRATION_ARRIVE:
             self._on_migration_arrive(*ev.payload, ev.time)
         elif ev.kind == EventKind.NODE_FAIL:
             self._on_fail(ev.payload, ev.time)
         elif ev.kind == EventKind.NODE_JOIN:
             self._on_join(ev.payload, ev.time)
+        elif ev.kind == EventKind.NODE_RESIZE:
+            self._on_resize(*ev.payload, ev.time)
         elif ev.kind == EventKind.TRIGGER_EVAL:
             self._on_trigger_eval(ev.time)
 
@@ -485,12 +648,14 @@ class ClusterRuntime:
         self._now = max(self._now, t)
         return n_events
 
-    def run(self, workload: Workload, *, failures=(), joins=(),
+    def run(self, workload: Workload, *, failures=(), joins=(), resizes=(),
             horizon: float | None = None, max_events: int = 2_000_000
             ) -> Metrics:
         """Run to completion (or ``horizon``). ``failures``/``joins`` are
-        ``(time, node)`` sequences."""
-        self.schedule_workload(workload, failures=failures, joins=joins)
+        ``(time, node)`` sequences; ``resizes`` are ``(time, node,
+        fraction)`` capacity changes."""
+        self.schedule_workload(workload, failures=failures, joins=joins,
+                               resizes=resizes)
         n_events = 0
         while self._eq:
             n_events += 1
@@ -505,7 +670,9 @@ class ClusterRuntime:
 
 
 def run_policy(policy: str | Policy, workload: Workload, powers, *,
-               failures=(), joins=(), **runtime_kwargs) -> Metrics:
+               failures=(), joins=(), resizes=(), **runtime_kwargs
+               ) -> Metrics:
     """Convenience: one policy, one workload, fresh runtime."""
     rt = ClusterRuntime(powers, policy, **runtime_kwargs)
-    return rt.run(workload, failures=failures, joins=joins)
+    return rt.run(workload, failures=failures, joins=joins,
+                  resizes=resizes)

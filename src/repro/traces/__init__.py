@@ -14,6 +14,12 @@ and transparent gzip, so million-row traces ingest in seconds. The
 :func:`trace_scale` synthesizer bootstraps an Nx-rate workload from any
 loaded trace while preserving its burstiness and priority mix.
 
+Churn replays, too (PR 5): the Google parser emits EVICT/KILL/FAIL rows as
+exogenous requeue events (``eviction_mode="requeue"``, with ``"end"`` as
+the backward-compatible truncation), and
+:func:`load_google_machine_events` maps machine_events capacity churn onto
+the engine's fault schedule (failure/join/resize).
+
 Run one through the lab::
 
     from repro import lab
@@ -31,12 +37,22 @@ Run one through the lab::
 from __future__ import annotations
 
 from .azure import load_azure_packing
-from .google import GOOGLE_EVENT_TYPES, load_google_task_events
+from .google import (
+    EVICTION_MODES,
+    GOOGLE_EVENT_TYPES,
+    load_google_task_events,
+)
+from .machines import (
+    MACHINE_EVENT_TYPES,
+    MachineSchedule,
+    load_google_machine_events,
+)
 from .normalized import load_normalized_csv, write_normalized_csv
 from .schema import (
     OP_NAMES,
     OPS,
     Constraints,
+    Evictions,
     InfeasibleTaskError,
     TraceSchema,
     dense_tiers,
@@ -44,9 +60,10 @@ from .schema import (
 from .synth import trace_scale
 
 __all__ = [
-    "OPS", "OP_NAMES", "Constraints", "InfeasibleTaskError", "TraceSchema",
-    "dense_tiers",
-    "GOOGLE_EVENT_TYPES", "load_google_task_events",
+    "OPS", "OP_NAMES", "Constraints", "Evictions", "InfeasibleTaskError",
+    "TraceSchema", "dense_tiers",
+    "EVICTION_MODES", "GOOGLE_EVENT_TYPES", "load_google_task_events",
+    "MACHINE_EVENT_TYPES", "MachineSchedule", "load_google_machine_events",
     "load_azure_packing",
     "load_normalized_csv", "write_normalized_csv",
     "trace_scale",

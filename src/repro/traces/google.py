@@ -19,9 +19,23 @@ The mapping onto :class:`~repro.traces.schema.TraceSchema`:
 * ``t_arrive`` — first SUBMIT timestamp per (job, task), re-zeroed to the
   trace start and scaled by ``time_scale`` (default 1e-6: microseconds to
   seconds).
-* ``works``   — service demand in core-seconds: (last terminal event -
-  first SCHEDULE) x CPU request. Tasks with no complete SCHEDULE->end
-  interval (still running when the excerpt ends) fall back to
+* ``works``   — service demand in core-seconds. ``eviction_mode`` picks the
+  interval semantics:
+
+  - ``"requeue"`` (default) — the *useful* demand: (final FINISH - last
+    SCHEDULE) x CPU request, because every earlier EVICT/KILL/FAIL row
+    becomes an exogenous requeue event in ``TraceSchema.evictions`` and
+    the replay engine re-delivers the wasted attempts itself. Tasks whose
+    final terminal is not a FINISH are flagged ``ends_evicted`` (their
+    resubmission lies beyond the excerpt) and fall back to
+    ``default_duration``.
+  - ``"end"`` — the PR 4 backward-compatibility behavior: (last terminal
+    event - first SCHEDULE) x CPU request, EVICT/KILL/FAIL simply ending
+    the service interval. No requeue events are emitted, but
+    ``ends_evicted`` still marks eviction-truncated tasks so replays can
+    count them apart from completions instead of inflating throughput.
+
+  In both modes, tasks with no usable interval fall back to
   ``default_duration`` (default: the median observed duration).
 * ``packets`` — memory request x ``packet_scale`` (memory is the state a
   migration must move).
@@ -47,15 +61,22 @@ import warnings
 import numpy as np
 
 from .io import iter_numeric_chunks, iter_text_chunks
-from .schema import OPS, Constraints, TraceSchema, dense_tiers
+from .schema import OPS, Constraints, Evictions, TraceSchema, dense_tiers
 
-__all__ = ["load_google_task_events", "GOOGLE_EVENT_TYPES"]
+__all__ = ["load_google_task_events", "GOOGLE_EVENT_TYPES",
+           "EVICTION_MODES"]
+
+# EVICT/KILL/FAIL handling: "requeue" replays them as preemption events,
+# "end" keeps the PR 4 truncate-the-interval behavior
+EVICTION_MODES = ("requeue", "end")
 
 GOOGLE_EVENT_TYPES = {
     "SUBMIT": 0, "SCHEDULE": 1, "EVICT": 2, "FAIL": 3, "FINISH": 4,
     "KILL": 5, "LOST": 6,
 }
 _TERMINAL = (2, 3, 4, 5, 6)
+# mid-life rows replayed as requeue events in eviction_mode="requeue"
+_REQUEUE_TYPES = (2, 3, 5)  # EVICT, FAIL, KILL
 _GOOGLE_OPS = {0: OPS["=="], 1: OPS["!="], 2: OPS["<"], 3: OPS[">"]}
 
 # task_events columns we read (see module docstring)
@@ -93,13 +114,18 @@ def _first_by_group(inv: np.ndarray, n: int, values: np.ndarray,
 
 
 def load_google_task_events(path, *, constraints_path=None,
+                            eviction_mode: str = "requeue",
                             time_scale: float = 1e-6,
                             packet_scale: float = 64.0,
                             default_duration: float | None = None,
                             horizon: float | None = None,
                             chunk_bytes: int = 1 << 24) -> TraceSchema:
     """Parse a task_events file (plain or gzipped CSV) into a
-    :class:`TraceSchema`; see the module docstring for column semantics."""
+    :class:`TraceSchema`; see the module docstring for column semantics
+    and the ``eviction_mode`` contract."""
+    if eviction_mode not in EVICTION_MODES:
+        raise ValueError(f"unknown eviction_mode {eviction_mode!r}; "
+                         f"have {sorted(EVICTION_MODES)}")
     chunks = list(iter_numeric_chunks(path, usecols=_USECOLS,
                                       chunk_bytes=chunk_bytes))
     if not chunks:
@@ -122,11 +148,25 @@ def load_google_task_events(path, *, constraints_path=None,
         np.minimum.at(out, inv[mask], values[mask])
         return out
 
+    sched = ev == GOOGLE_EVENT_TYPES["SCHEDULE"]
     t_submit = grouped_min(sub, ts)
-    t_sched = grouped_min(ev == GOOGLE_EVENT_TYPES["SCHEDULE"], ts)
+    t_sched = grouped_min(sched, ts)
+    t_last_sched = np.full(n_all, -big)
+    np.maximum.at(t_last_sched, inv[sched], ts[sched])
     term = np.isin(ev, _TERMINAL)
     t_end = np.full(n_all, -big)
     np.maximum.at(t_end, inv[term], ts[term])
+    # final terminal event type per task (FINISH wins a timestamp tie —
+    # the kindest reading of an ambiguous shard interleave)
+    tr_idx = np.flatnonzero(term)
+    final_type = np.full(n_all, -1, dtype=np.int64)
+    if tr_idx.size:
+        fin = (ev[tr_idx] == GOOGLE_EVENT_TYPES["FINISH"]).astype(np.int8)
+        o = np.lexsort((fin, ts[tr_idx], inv[tr_idx]))
+        g = inv[tr_idx][o]
+        last = np.ones(g.shape[0], dtype=bool)
+        last[:-1] = g[1:] != g[:-1]
+        final_type[g[last]] = ev[tr_idx][o][last]
 
     # per-task attributes from the earliest SUBMIT row
     pri = _first_by_group(inv[sub], n_all, rows[sub, _PRI], ts[sub])
@@ -135,13 +175,26 @@ def load_google_task_events(path, *, constraints_path=None,
 
     seen = np.isfinite(t_submit) & (t_submit < big)
     idx = np.flatnonzero(seen)
+    # kept-task position of each raw group (-1 = task never SUBMITted)
+    pos = np.full(n_all, -1, dtype=np.int64)
+    pos[idx] = np.arange(idx.size)
+    t_end_full = t_end  # per-group, pre-filter (eviction rows index it)
     t_submit, t_sched, t_end = t_submit[idx], t_sched[idx], t_end[idx]
+    t_last_sched, final_type = t_last_sched[idx], final_type[idx]
     pri, cpu, mem = pri[idx], cpu[idx], mem[idx]
     kept_keys = uniq_keys[idx]
 
-    dur = (t_end - t_sched) * time_scale
-    have_dur = np.isfinite(t_sched) & (t_sched < big) & (t_end > -big) \
-        & (dur > 0)
+    finished = final_type == GOOGLE_EVENT_TYPES["FINISH"]
+    ends_evicted = (t_end > -big) & ~finished
+    if eviction_mode == "end":
+        dur = (t_end - t_sched) * time_scale
+        have_dur = np.isfinite(t_sched) & (t_sched < big) & (t_end > -big) \
+            & (dur > 0)
+    else:
+        # useful demand: the final successful run only — earlier attempts
+        # are re-delivered by the replay engine via the eviction events
+        dur = (t_end - t_last_sched) * time_scale
+        have_dur = finished & (t_last_sched > -big) & (dur > 0)
     if default_duration is None:
         if have_dur.any():
             default_duration = float(np.median(dur[have_dur]))
@@ -164,17 +217,35 @@ def load_google_task_events(path, *, constraints_path=None,
     mem = np.where(np.isfinite(mem) & (mem > 0), mem, 1.0 / packet_scale)
     pri = np.where(np.isfinite(pri), pri, 0.0)
 
-    t_arrive = (t_submit - t_submit.min()) * time_scale
+    t_zero = t_submit.min()
+    t_arrive = (t_submit - t_zero) * time_scale
     works = np.maximum(dur * cpu, 1e-9)
     packets = np.maximum(mem * packet_scale, 1e-9)
     tiers = dense_tiers(pri.astype(np.int64), higher_is_more_important=True)
 
     order = np.argsort(t_arrive, kind="stable")
+    rank = np.empty(order.shape[0], dtype=np.int64)
+    rank[order] = np.arange(order.shape[0])
     constraints = _load_constraints(constraints_path, kept_keys[order],
                                     chunk_bytes)
+    evictions = Evictions()
+    if eviction_mode == "requeue":
+        # every EVICT/KILL/FAIL strictly before the task's final terminal
+        # becomes a requeue event (the final one, if any, is the task's end
+        # — recorded in ends_evicted, not replayed)
+        req = np.isin(ev, _REQUEUE_TYPES) & (ts < t_end_full[inv])
+        if req.any():
+            r_task = pos[inv[req]]
+            ok = r_task >= 0
+            r_task = rank[r_task[ok]]
+            r_time = (ts[req][ok] - t_zero) * time_scale
+            o = np.lexsort((r_task, r_time))
+            evictions = Evictions(r_task[o], r_time[o])
     trace = TraceSchema(t_arrive=t_arrive[order], works=works[order],
                         packets=packets[order], priority=tiers[order],
-                        constraints=constraints)
+                        constraints=constraints, evictions=evictions,
+                        ends_evicted=ends_evicted[order],
+                        t_zero_raw=float(t_zero))
     if horizon is not None:
         trace = trace.clipped(horizon)
     return trace

@@ -9,27 +9,62 @@ preprocessed traces round-trip without the original files:
 
   The 3-column form is PR 2's ``load_trace_csv`` format (priority 0
   everywhere); the 4-column form adds the tier.
-* optional constraints sidecar (JSON)::
+* optional sidecar (JSON) for the sparse axes — constraints, eviction
+  events and end-of-life outcomes::
 
       {"attr_names": ["machine_class"],
-       "rows": [[task_index, "machine_class", ">=", 2.0], ...]}
+       "rows": [[task_index, "machine_class", ">=", 2.0], ...],
+       "evictions": [[task_index, time], ...],
+       "ends_evicted": [task_index, ...]}
 
   ``task_index`` refers to the row's position in *arrival order* (the
   order :func:`load_normalized_csv` returns), ops are the spellings in
-  :data:`repro.traces.schema.OPS`.
+  :data:`repro.traces.schema.OPS`, eviction times share ``t_arrive``'s
+  clock. All keys are optional — PR 4 sidecars (constraints only) load
+  unchanged.
+
+Both files may be gzipped: loading sniffs magic bytes, writing goes by the
+``.gz`` suffix.
 """
 
 from __future__ import annotations
 
+import contextlib
+import gzip
+import io as _io
 import json
 from pathlib import Path
 
 import numpy as np
 
-from .io import read_numeric_csv
-from .schema import OPS, Constraints, TraceSchema
+from .io import open_maybe_gzip, read_numeric_csv
+from .schema import OPS, Constraints, Evictions, TraceSchema
 
 __all__ = ["load_normalized_csv", "write_normalized_csv"]
+
+
+def _read_text(path) -> str:
+    with open_maybe_gzip(path) as fh:
+        return fh.read().decode()
+
+
+@contextlib.contextmanager
+def _text_writer(path):
+    """Streaming text handle; gzipped when the path says so (mtime=0
+    keeps archives byte-identical across regenerations)."""
+    if str(path).endswith(".gz"):
+        with open(path, "wb") as raw, \
+                gzip.GzipFile(fileobj=raw, mode="wb", mtime=0) as gz, \
+                _io.TextIOWrapper(gz) as fh:
+            yield fh
+    else:
+        with open(path, "w") as fh:
+            yield fh
+
+
+def _write_text(path, text: str) -> None:
+    with _text_writer(path) as fh:
+        fh.write(text)
 
 
 def _sniff_columns(path) -> int:
@@ -63,18 +98,24 @@ def load_normalized_csv(path, *, constraints_path=None,
         raise ValueError(f"trace {path!r}: work and packets must be > 0")
     tiers = (rows[:, 3].astype(np.int32) if n_cols == 4
              else np.zeros(rows.shape[0], np.int32))
-    constraints = Constraints()
+    constraints, evictions, ends_evicted = (Constraints(), Evictions(),
+                                            None)
     if constraints_path is not None:
-        constraints = _load_sidecar(constraints_path)
+        constraints, evictions, ends_evicted = _load_sidecar(
+            constraints_path, rows.shape[0])
     trace = TraceSchema(t_arrive=t, works=works, packets=packets,
-                        priority=tiers, constraints=constraints)
+                        priority=tiers, constraints=constraints,
+                        evictions=evictions,
+                        ends_evicted=(np.zeros(rows.shape[0], np.bool_)
+                                      if ends_evicted is None
+                                      else ends_evicted))
     if horizon is not None:
         trace = trace.clipped(horizon)
     return trace
 
 
-def _load_sidecar(path) -> Constraints:
-    d = json.loads(Path(path).read_text())
+def _load_sidecar(path, m: int):
+    d = json.loads(_read_text(path))
     names = tuple(d.get("attr_names", ()))
     idx = {a: i for i, a in enumerate(names)}
     rows = d.get("rows", ())
@@ -91,26 +132,48 @@ def _load_sidecar(path) -> Constraints:
         attr.append(idx[a])
         op.append(OPS[o])
         value.append(float(v))
-    return Constraints(names, task, attr, op, value)
+    ev_rows = d.get("evictions", ())
+    evictions = Evictions(
+        np.asarray([int(r[0]) for r in ev_rows], dtype=np.int64),
+        np.asarray([float(r[1]) for r in ev_rows], dtype=np.float64))
+    ends = np.zeros(m, dtype=np.bool_)
+    for tid in d.get("ends_evicted", ()):
+        if not 0 <= int(tid) < m:
+            raise ValueError(f"sidecar {path!r}: ends_evicted index {tid} "
+                             f"outside the {m}-task trace")
+        ends[int(tid)] = True
+    return Constraints(names, task, attr, op, value), evictions, ends
 
 
 def write_normalized_csv(trace: TraceSchema, path, *,
-                         constraints_path=None) -> None:
+                         constraints_path=None) -> bool:
     """Inverse of :func:`load_normalized_csv` (the ``repro.lab trace
-    --out`` conversion target)."""
-    with open(path, "w") as fh:
+    --out`` conversion target). The sidecar carries every sparse axis —
+    constraints, eviction events, end-of-life outcomes — and is written
+    only when ``constraints_path`` is given and at least one axis is
+    non-empty; returns whether it was."""
+    with _text_writer(path) as fh:
         fh.write("# t_arrive,work,packets,priority\n")
         for i in range(trace.m):
             fh.write(f"{trace.t_arrive[i]:.9g},{trace.works[i]:.9g},"
                      f"{trace.packets[i]:.9g},{int(trace.priority[i])}\n")
-    if constraints_path is not None and not trace.constraints.empty:
-        from .schema import OP_NAMES
-        c = trace.constraints
-        payload = {
-            "attr_names": list(c.attr_names),
-            "rows": [[int(c.task[j]), c.attr_names[c.attr[j]],
-                      OP_NAMES[int(c.op[j])], float(c.value[j])]
-                     for j in range(c.k)],
-        }
-        Path(constraints_path).write_text(json.dumps(payload, indent=2)
-                                          + "\n")
+    has_sidecar_data = (not trace.constraints.empty
+                        or not trace.evictions.empty
+                        or bool(trace.ends_evicted.any()))
+    if constraints_path is None or not has_sidecar_data:
+        return False
+    from .schema import OP_NAMES
+    c = trace.constraints
+    payload = {
+        "attr_names": list(c.attr_names),
+        "rows": [[int(c.task[j]), c.attr_names[c.attr[j]],
+                  OP_NAMES[int(c.op[j])], float(c.value[j])]
+                 for j in range(c.k)],
+        "evictions": [[int(trace.evictions.task[j]),
+                       float(trace.evictions.time[j])]
+                      for j in range(trace.evictions.k)],
+        "ends_evicted": [int(i) for i in
+                         np.flatnonzero(trace.ends_evicted)],
+    }
+    _write_text(constraints_path, json.dumps(payload, indent=2) + "\n")
+    return True

@@ -20,6 +20,12 @@ Feasibility evaluation is vectorized: predicates are grouped by their
 ``(attr, op, value)`` signature, each signature is evaluated once against
 all nodes, and the per-task AND is a grouped scatter — million-task masks
 cost milliseconds, not minutes.
+
+Traces additionally carry *churn*: sparse :class:`Evictions` rows replay a
+real cluster's preemptions as exogenous requeue events, and the per-task
+``ends_evicted`` flag records tasks whose trace life ended in an
+EVICT/KILL/FAIL rather than a FINISH, so replays can count them apart from
+genuine completions.
 """
 
 from __future__ import annotations
@@ -34,6 +40,7 @@ __all__ = [
     "OPS",
     "OP_NAMES",
     "Constraints",
+    "Evictions",
     "TraceSchema",
     "InfeasibleTaskError",
     "dense_tiers",
@@ -57,6 +64,27 @@ _OP_FNS = {
 class InfeasibleTaskError(ValueError):
     """A task's constraints exclude every node in the cluster — surfaced
     as a diagnostic naming the task and its predicates, never a hang."""
+
+
+def _gather_rows(src_task: np.ndarray, tasks: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Resampling gather shared by the sparse per-task axes: for each new
+    task ``i`` (inheriting source task ``tasks[i]``), the source row
+    indices carrying that task's entries (duplicates copy their rows).
+    Returns ``(new_task, rows)`` — empty when nothing matches."""
+    order = np.argsort(src_task, kind="stable")
+    srt = src_task[order]
+    start = np.searchsorted(srt, tasks, side="left")
+    stop = np.searchsorted(srt, tasks, side="right")
+    cnt = stop - start
+    total = int(cnt.sum())
+    if total == 0:
+        empty = np.zeros(0, np.int64)
+        return empty, empty
+    new_task = np.repeat(np.arange(tasks.shape[0], dtype=np.int64), cnt)
+    base = np.repeat(start, cnt)
+    offs = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+    return new_task, order[base + offs]
 
 
 @dataclass(frozen=True)
@@ -120,18 +148,9 @@ class Constraints:
         tasks = np.asarray(tasks, dtype=np.int64)
         if self.empty:
             return Constraints(self.attr_names)
-        order = np.argsort(self.task, kind="stable")
-        srt = self.task[order]
-        start = np.searchsorted(srt, tasks, side="left")
-        stop = np.searchsorted(srt, tasks, side="right")
-        cnt = stop - start
-        total = int(cnt.sum())
-        if total == 0:
+        new_task, rows = _gather_rows(self.task, tasks)
+        if rows.size == 0:
             return Constraints(self.attr_names)
-        new_task = np.repeat(np.arange(tasks.shape[0], dtype=np.int64), cnt)
-        base = np.repeat(start, cnt)
-        offs = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
-        rows = order[base + offs]
         return Constraints(self.attr_names, new_task, self.attr[rows],
                            self.op[rows], self.value[rows])
 
@@ -171,6 +190,64 @@ class Constraints:
         return mask
 
 
+@dataclass(frozen=True)
+class Evictions:
+    """Sparse exogenous eviction events: row ``j`` says task ``task[j]`` is
+    preempted at trace-relative time ``time[j]`` (same clock as
+    ``t_arrive``). A task may carry any number of rows; a task absent from
+    ``task`` is never evicted.
+
+    The event engine replays each row by pulling the task off its machine,
+    discarding the interrupted attempt's progress (wasted work — a
+    nonpreemptive scheduler cannot checkpoint mid-task), and requeueing the
+    task through the normal tier-ordered admission path. Rows whose task is
+    already finished at fire time are no-ops — under a better policy the
+    replay simply outruns the trace's churn.
+    """
+
+    task: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    time: np.ndarray = field(default_factory=lambda: np.zeros(0, np.float64))
+
+    def __post_init__(self):
+        object.__setattr__(self, "task",
+                           np.asarray(self.task, dtype=np.int64))
+        object.__setattr__(self, "time",
+                           np.asarray(self.time, dtype=np.float64))
+        if self.time.shape[0] != self.task.shape[0]:
+            raise ValueError("eviction columns must share one length")
+        if self.task.shape[0] and not np.isfinite(self.time).all():
+            raise ValueError("eviction times must be finite")
+
+    @property
+    def k(self) -> int:
+        return int(self.task.shape[0])
+
+    @property
+    def empty(self) -> bool:
+        return self.k == 0
+
+    def select(self, tasks: np.ndarray) -> "Evictions":
+        """Eviction rows for a resampled task list: new task ``i`` inherits
+        the rows of source task ``tasks[i]`` (duplicates copy their rows).
+        Times are copied verbatim; shift them afterwards if the resample
+        moved the task's arrival (see :func:`repro.traces.trace_scale`)."""
+        tasks = np.asarray(tasks, dtype=np.int64)
+        if self.empty:
+            return Evictions()
+        new_task, rows = _gather_rows(self.task, tasks)
+        if rows.size == 0:
+            return Evictions()
+        return Evictions(new_task, self.time[rows])
+
+    def shifted(self, delta: np.ndarray) -> "Evictions":
+        """Times moved by a per-task offset (``delta[task[j]]``) — how a
+        resampled task drags its eviction schedule along with its arrival."""
+        if self.empty:
+            return self
+        delta = np.asarray(delta, dtype=np.float64)
+        return Evictions(self.task, self.time + delta[self.task])
+
+
 def dense_tiers(raw: np.ndarray, *, higher_is_more_important: bool
                 ) -> np.ndarray:
     """Remap a native priority column onto dense tiers 0..T-1 with tier 0
@@ -195,6 +272,17 @@ class TraceSchema(Workload):
     priority: np.ndarray = field(
         default_factory=lambda: np.zeros(0, np.int32))
     constraints: Constraints = field(default_factory=Constraints)
+    # exogenous preemption replay: (task, time) requeue events, plus a
+    # per-task flag for tasks whose *trace* life ended in an eviction/kill
+    # rather than a FINISH (the end-mode throughput-inflation fix)
+    evictions: Evictions = field(default_factory=Evictions)
+    ends_evicted: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.bool_))
+    # the *raw* timestamp (source units, pre-time_scale) that t_arrive=0
+    # corresponds to — what companion files on the same raw clock
+    # (machine_events) must be re-zeroed against. 0.0 for formats whose
+    # clock already starts at zero (normalized CSV, synthetic).
+    t_zero_raw: float = 0.0
 
     def __post_init__(self):
         super().__post_init__()
@@ -213,6 +301,20 @@ class TraceSchema(Workload):
         if not c.empty and (c.task.min() < 0 or c.task.max() >= self.m):
             raise ValueError("constraint rows reference tasks outside the "
                              f"trace (m={self.m})")
+        ev = self.evictions
+        if not isinstance(ev, Evictions):
+            raise TypeError("evictions must be an Evictions instance")
+        if not ev.empty and (ev.task.min() < 0 or ev.task.max() >= self.m):
+            raise ValueError("eviction rows reference tasks outside the "
+                             f"trace (m={self.m})")
+        ee = np.asarray(self.ends_evicted, dtype=np.bool_)
+        if ee.shape[0] == 0 and self.m:
+            ee = np.zeros(self.m, dtype=np.bool_)
+        if ee.shape[0] != self.m:
+            raise ValueError(
+                f"ends_evicted has {ee.shape[0]} entries for {self.m} tasks")
+        object.__setattr__(self, "ends_evicted", ee)
+        object.__setattr__(self, "t_zero_raw", float(self.t_zero_raw))
 
     @property
     def n_tiers(self) -> int:
@@ -222,14 +324,25 @@ class TraceSchema(Workload):
     def constrained(self) -> bool:
         return not self.constraints.empty
 
+    @property
+    def preempted(self) -> bool:
+        """True when the trace carries requeue (eviction) events."""
+        return not self.evictions.empty
+
     def clipped(self, horizon: float) -> "TraceSchema":
-        """Tasks arriving before ``horizon`` (constraint rows re-indexed)."""
+        """Tasks arriving before ``horizon`` (constraint and eviction rows
+        re-indexed; a kept task keeps its whole eviction schedule, even
+        rows firing past the horizon — the *run* horizon decides what
+        actually executes)."""
         keep = self.t_arrive < horizon
         idx = np.flatnonzero(keep)
         return TraceSchema(
             t_arrive=self.t_arrive[keep], works=self.works[keep],
             packets=self.packets[keep], priority=self.priority[keep],
-            constraints=self.constraints.select(idx))
+            constraints=self.constraints.select(idx),
+            evictions=self.evictions.select(idx),
+            ends_evicted=self.ends_evicted[keep],
+            t_zero_raw=self.t_zero_raw)
 
     def feasibility(self, attr_names, attr_matrix) -> np.ndarray:
         """Per-task node feasibility ``(m, n)`` against a cluster attribute

@@ -11,7 +11,8 @@ trace and not a Poisson process:
 * **priority / work / packet mix** — new tasks are resampled *jointly*
   (with replacement) from the same window's tasks, so within-window
   correlations between priority, size and payload survive; a task's
-  placement constraints travel with it;
+  placement constraints, eviction schedule (times shifted with its
+  arrival) and end-of-life outcome travel with it;
 * **arrival micro-structure** — resampled tasks keep their source arrival
   time plus uniform jitter of one mean inter-arrival gap, so sub-window
   clumping neither collapses onto duplicated timestamps nor smears into
@@ -55,7 +56,10 @@ def trace_scale(trace: TraceSchema, factor: float, *, seed: int = 0,
         return TraceSchema(
             t_arrive=np.full(count, float(t[0])), works=trace.works[src],
             packets=trace.packets[src], priority=trace.priority[src],
-            constraints=trace.constraints.select(src))
+            constraints=trace.constraints.select(src),
+            evictions=trace.evictions.select(src),
+            ends_evicted=trace.ends_evicted[src],
+            t_zero_raw=trace.t_zero_raw)
 
     width = span / n_windows
     win = np.minimum(((t - t[0]) / width).astype(np.int64), n_windows - 1)
@@ -82,7 +86,12 @@ def trace_scale(trace: TraceSchema, factor: float, *, seed: int = 0,
     times = np.concatenate(time_chunks)
     order = np.argsort(times, kind="stable")
     src = src[order]
+    new_t = times[order] - times.min()
+    # a resampled task drags its eviction schedule along with its arrival
+    evictions = trace.evictions.select(src).shifted(new_t - t[src])
     return TraceSchema(
-        t_arrive=times[order] - times.min(), works=trace.works[src],
+        t_arrive=new_t, works=trace.works[src],
         packets=trace.packets[src], priority=trace.priority[src],
-        constraints=trace.constraints.select(src))
+        constraints=trace.constraints.select(src),
+        evictions=evictions, ends_evicted=trace.ends_evicted[src],
+        t_zero_raw=trace.t_zero_raw)

@@ -5,6 +5,7 @@ from __future__ import annotations
 import contextlib
 import gzip
 import json
+import tempfile
 import time
 import warnings
 from pathlib import Path
@@ -17,16 +18,20 @@ from repro.runtime import ClusterRuntime
 from repro.traces import (
     OPS,
     Constraints,
+    Evictions,
     InfeasibleTaskError,
     TraceSchema,
     dense_tiers,
     load_azure_packing,
+    load_google_machine_events,
     load_google_task_events,
     load_normalized_csv,
     load_trace,
     trace_scale,
     write_normalized_csv,
 )
+
+from _hypothesis_compat import given, settings, st
 
 DATA = Path(__file__).parent / "data"
 G_EVENTS = DATA / "google_tiny_events.csv"
@@ -114,19 +119,59 @@ def test_google_column_semantics():
     assert tr.m == 4
     # arrival order: (500,0) t=0, (600,1) t=0.5, (500,1) t=1, (600,0) t=2
     np.testing.assert_allclose(tr.t_arrive, [0.0, 0.5, 1.0, 2.0])
-    # work = (terminal - schedule) * cpu; fallback median=4s for (500,1);
-    # median cpu fill 0.5 for (600,0)
-    np.testing.assert_allclose(tr.works, [3.0, 3.2, 1.0, 2.0])
+    # requeue mode (default): work = final FINISH interval * cpu; the
+    # EVICT-ended (600,1) and interval-less (500,1) fall back to the
+    # median *finished* duration 5s; median cpu fill 0.5 for (600,0)
+    np.testing.assert_allclose(tr.works, [3.0, 4.0, 1.25, 2.0])
     np.testing.assert_allclose(tr.packets,
                                np.array([0.4, 0.3, 0.2, 0.1]) * 64.0)
     # native 11/4/9/0 -> dense tiers, bigger = more important
     assert tr.priority.tolist() == [0, 2, 1, 3]
     assert tr.n_tiers == 4
+    # (600,1)'s trace life ended at its EVICT row; no *mid-life* eviction
+    # exists, so no requeue events are emitted
+    assert tr.ends_evicted.tolist() == [False, True, False, False]
+    assert tr.evictions.empty
     # constraints joined on (job, task idx); absent-task row dropped
     assert tr.constraints.k == 3
     assert tr.constraints.describe_task(0) == "machine_class > 1 AND ssd == 1"
     assert tr.constraints.describe_task(1) == "machine_class < 2"
     assert tr.constraints.describe_task(2) == "(unconstrained)"
+
+
+def test_google_end_mode_is_backward_compatible():
+    """eviction_mode='end' reproduces the PR 4 numbers: EVICT rows end the
+    service interval (work spans first SCHEDULE -> last terminal), no
+    requeue events — but eviction-truncated tasks are still flagged."""
+    with pytest.warns(UserWarning):
+        tr = load_google_task_events(str(G_EVENTS), eviction_mode="end")
+    np.testing.assert_allclose(tr.works, [3.0, 3.2, 1.0, 2.0])
+    assert tr.evictions.empty
+    assert tr.ends_evicted.tolist() == [False, True, False, False]
+    with pytest.raises(ValueError, match="eviction_mode"):
+        load_google_task_events(str(G_EVENTS), eviction_mode="restart")
+
+
+def test_google_requeue_mode_emits_midlife_evictions(tmp_path):
+    """A SCHED->EVICT->SCHED->FINISH lifetime: the mid-life EVICT becomes a
+    requeue event, and the useful work is the *final* run only."""
+    p = tmp_path / "events.csv"
+    p.write_text(
+        "1000000,,7,0,,0,u,0,9,0.5,0.2,\n"    # SUBMIT t=1
+        "2000000,,7,0,,1,u,0,9,0.5,0.2,\n"    # SCHEDULE t=2
+        "5000000,,7,0,,2,u,0,9,0.5,0.2,\n"    # EVICT t=5 (mid-life)
+        "6000000,,7,0,,1,u,0,9,0.5,0.2,\n"    # SCHEDULE t=6
+        "10000000,,7,0,,4,u,0,9,0.5,0.2,\n")  # FINISH t=10
+    tr = load_google_task_events(str(p))
+    assert tr.m == 1 and not tr.ends_evicted[0]
+    np.testing.assert_allclose(tr.works, [2.0])  # (10-6) * 0.5 cpu
+    assert tr.evictions.k == 1
+    assert tr.evictions.task.tolist() == [0]
+    np.testing.assert_allclose(tr.evictions.time, [4.0])  # 5s - submit 1s
+    # end mode spans the whole lifetime instead and replays nothing
+    tr_end = load_google_task_events(str(p), eviction_mode="end")
+    np.testing.assert_allclose(tr_end.works, [4.0])  # (10-2) * 0.5
+    assert tr_end.evictions.empty and not tr_end.ends_evicted[0]
 
 
 def test_google_out_of_order_rows_match_sorted(tmp_path):
@@ -233,6 +278,253 @@ def test_normalized_empty_and_bad_columns(tmp_path):
         load_normalized_csv(str(bad))
 
 
+def _random_schema(seed: int) -> TraceSchema:
+    """Arbitrary small TraceSchema — every axis populated at random."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 25))
+    k_con = int(rng.integers(0, 2 * m))
+    k_ev = int(rng.integers(0, 2 * m))
+    names = ("machine_class", "ssd")[:int(rng.integers(1, 3))]
+    constraints = Constraints(
+        names, rng.integers(0, m, k_con),
+        rng.integers(0, len(names), k_con).astype(np.int32),
+        rng.choice(list(OPS.values()), k_con).astype(np.int8),
+        np.round(rng.uniform(0, 4, k_con), 6))
+    return TraceSchema(
+        t_arrive=np.sort(np.round(rng.uniform(0, 50, m), 6)),
+        works=np.round(rng.uniform(0.5, 9, m), 6),
+        packets=np.round(rng.uniform(0.5, 9, m), 6),
+        priority=rng.integers(0, 4, m).astype(np.int32),
+        constraints=constraints,
+        evictions=Evictions(rng.integers(0, m, k_ev),
+                            np.round(rng.uniform(0, 60, k_ev), 6)),
+        ends_evicted=rng.random(m) < 0.25)
+
+
+def _assert_round_trips(trace: TraceSchema, tmp_path, gz: bool) -> None:
+    suffix = ".gz" if gz else ""
+    csv = tmp_path / f"rt.csv{suffix}"
+    side = tmp_path / f"rt.json{suffix}"
+    write_normalized_csv(trace, csv, constraints_path=side)
+    back = load_normalized_csv(str(csv), constraints_path=str(side)
+                               if side.exists() else None)
+    assert back.m == trace.m
+    np.testing.assert_allclose(back.t_arrive, trace.t_arrive, rtol=1e-6)
+    np.testing.assert_allclose(back.works, trace.works, rtol=1e-6)
+    np.testing.assert_allclose(back.packets, trace.packets, rtol=1e-6)
+    assert back.priority.tolist() == trace.priority.tolist()
+    assert back.ends_evicted.tolist() == trace.ends_evicted.tolist()
+    # sparse rows may legally be re-ordered by (task, …): compare as sets
+    assert back.evictions.k == trace.evictions.k
+    assert sorted(zip(back.evictions.task.tolist(),
+                      back.evictions.time.tolist())) == pytest.approx(
+        sorted(zip(trace.evictions.task.tolist(),
+                   trace.evictions.time.tolist())))
+    assert back.constraints.k == trace.constraints.k
+    for tid in range(trace.m):
+        assert (back.constraints.describe_task(tid)
+                == trace.constraints.describe_task(tid))
+
+
+@pytest.mark.parametrize("gz", [False, True])
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_normalized_round_trip_examples(tmp_path, seed, gz):
+    _assert_round_trips(_random_schema(seed), tmp_path, gz)
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.booleans())
+def test_normalized_round_trip_property(seed, gz):
+    # a fresh directory per generated example — function-scoped pytest
+    # fixtures and @given don't mix (hypothesis health check, and a stale
+    # sidecar from one example would bleed into the next)
+    with tempfile.TemporaryDirectory() as d:
+        _assert_round_trips(_random_schema(seed), Path(d), gz)
+
+
+def test_sidecar_without_evictions_still_loads(tmp_path):
+    """PR 4 sidecars (constraints only, no eviction keys) stay loadable."""
+    side = tmp_path / "old.json"
+    side.write_text(json.dumps({
+        "attr_names": ["mc"], "rows": [[0, "mc", ">=", 1.0]]}))
+    csv = tmp_path / "t.csv"
+    csv.write_text("0.0,1.0,1.0,0\n")
+    tr = load_normalized_csv(str(csv), constraints_path=str(side))
+    assert tr.constraints.k == 1
+    assert tr.evictions.empty and not tr.ends_evicted.any()
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"ends_evicted": [5]}))
+    with pytest.raises(ValueError, match="ends_evicted index 5"):
+        load_normalized_csv(str(csv), constraints_path=str(bad))
+
+
+# ---------------------------------------------------------------------------
+# machine_events parser
+# ---------------------------------------------------------------------------
+
+def _machine_events(tmp_path, text: str):
+    p = tmp_path / "machines.csv"
+    p.write_text(text)
+    return load_google_machine_events(str(p), time_scale=1e-6)
+
+
+def test_machine_events_remove_add_update_mapping(tmp_path):
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,10,0,,1.0,0.5",          # ADD machine 10 (census)
+        "0,11,0,,0.5,0.5",          # ADD machine 11 (census)
+        "4000000,10,1,,,",          # REMOVE 10 at t=4
+        "9000000,10,0,,1.0,0.5",    # ADD 10 back at t=9
+        "6000000,11,2,,0.25,0.5",   # UPDATE 11 to half capacity at t=6
+    ]) + "\n")
+    assert sched.n_machines == 2
+    assert sched.machine_ids == (10, 11)
+    assert sched.failures == ((4.0, 0),)
+    assert sched.joins == ((9.0, 0),)
+    assert sched.resizes == ((6.0, 1, 0.5),)  # 0.25 / first-seen 0.5
+
+
+def test_machine_events_born_mid_trace_and_zero_capacity(tmp_path):
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,5,0,,1.0,0.5",
+        "3000000,6,0,,1.0,0.5",     # machine 6 first appears at t=3
+        "7000000,5,2,,0.0,0.5",     # UPDATE to zero capacity = removal
+    ]) + "\n")
+    assert (0.0, 1) in sched.failures     # 6 absent before its ADD
+    assert sched.joins == ((3.0, 1),)
+    assert (7.0, 0) in sched.failures     # zero-capacity UPDATE
+    assert sched.resizes == ()
+
+
+def test_machine_events_rejoin_keeps_resized_capacity(tmp_path):
+    """A machine that resized, failed, and rejoined is still resized; no
+    spurious reconciling event is emitted at the rejoin."""
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,1,0,,1.0,0.5",
+        "2000000,1,2,,0.5,0.5",     # resize to half
+        "4000000,1,1,,,",           # remove
+        "8000000,1,0,,0.5,0.5",     # rejoin at the same (halved) capacity
+    ]) + "\n")
+    assert sched.resizes == ((2.0, 0, 0.5),)
+    assert sched.failures == ((4.0, 0),)
+    assert sched.joins == ((8.0, 0),)
+
+
+def test_machine_events_zero_capacity_rejoin_stays_down(tmp_path):
+    """An ADD of a machine whose desired capacity is zero must not raise
+    it: a same-instant failure+join pair would resolve as node-up under
+    the engine's tie-break (NODE_FAIL before NODE_JOIN)."""
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,1,0,,1.0,0.5",
+        "10000000,1,1,,,",          # REMOVE at t=10
+        "15000000,1,2,,0.0,0.5",    # UPDATE to zero capacity while down
+        "20000000,1,0,,,",          # ADD back, capacity still zero
+    ]) + "\n")
+    assert sched.failures == ((10.0, 0),)
+    assert sched.joins == ()            # never resurrected
+    assert sched.resizes == ()
+    # a later UPDATE restoring capacity brings it back up via ADD
+    sched2 = _machine_events(tmp_path, "\n".join([
+        "0,1,0,,1.0,0.5",
+        "10000000,1,1,,,",
+        "15000000,1,2,,0.0,0.5",
+        "20000000,1,2,,1.0,0.5",    # capacity restored while down
+        "25000000,1,0,,,",          # the ADD raises it
+    ]) + "\n")
+    assert sched2.joins == ((25.0, 0),)
+
+
+def test_machine_events_zero_update_recovers_via_update(tmp_path):
+    """A machine downed by a zero-capacity UPDATE (never REMOVEd) comes
+    straight back when an UPDATE restores its capacity — only REMOVEd
+    machines wait for an ADD."""
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,1,0,,1.0,0.5",
+        "100000000,1,2,,0.0,0.5",   # UPDATE to zero at t=100
+        "200000000,1,2,,1.0,0.5",   # capacity restored at t=200
+    ]) + "\n")
+    assert sched.failures == ((100.0, 0),)
+    assert sched.joins == ((200.0, 0),)
+    assert sched.resizes == ()
+
+
+def test_machine_events_same_stamp_reboot_blips(tmp_path):
+    """REMOVE+ADD recorded at one timestamp is a reboot: the fold orders
+    REMOVE first, so the engine's NODE_FAIL-before-NODE_JOIN tie-break
+    leaves the machine up — not permanently dead."""
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,1,0,,1.0,0.5",
+        "100000000,1,1,,,",         # REMOVE at t=100...
+        "100000000,1,0,,1.0,0.5",   # ...and ADD at the same stamp
+    ]) + "\n")
+    assert sched.failures == ((100.0, 0),)
+    assert sched.joins == ((100.0, 0),)
+
+
+def test_machine_events_first_row_remove_counts(tmp_path):
+    """An excerpt cut mid-trace may open with a REMOVE: the machine
+    existed before the cut, so the removal must fail the node instead of
+    being dropped (silently overstating capacity)."""
+    sched = _machine_events(tmp_path, "\n".join([
+        "0,1,0,,1.0,0.5",
+        "5000000,2,1,,,",           # machine 2's first row is its REMOVE
+    ]) + "\n")
+    assert sched.n_machines == 2
+    assert sched.failures == ((5.0, 1),)
+
+
+def test_machine_events_validation(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("0,1,7,,1.0,0.5\n")
+    with pytest.raises(ValueError, match="unknown event type"):
+        load_google_machine_events(str(p))
+    empty = tmp_path / "empty.csv"
+    empty.write_text("# nothing\n")
+    assert load_google_machine_events(str(empty)).empty
+
+
+def test_machine_events_align_with_the_workload_clock(tmp_path):
+    """The public Google trace starts at raw 600s; t_arrive is re-zeroed
+    to the first SUBMIT, so the machine schedule must be re-zeroed against
+    the same origin or every capacity event fires 600s late."""
+    events = tmp_path / "events.csv"
+    events.write_text(
+        "600000000,,7,0,,0,u,0,9,0.5,0.2,\n"    # SUBMIT at raw 600s
+        "601000000,,7,0,,1,u,0,9,0.5,0.2,\n"
+        "605000000,,7,0,,4,u,0,9,0.5,0.2,\n")
+    mach = tmp_path / "machines.csv"
+    mach.write_text("0,1,0,,1.0,0.5\n"
+                    "0,2,0,,1.0,0.5\n"
+                    "610000000,1,1,,,\n")        # REMOVE 10s in
+    tr = load_google_task_events(str(events))
+    assert tr.t_zero_raw == pytest.approx(600e6)
+    np.testing.assert_allclose(tr.t_arrive, [0.0])
+    sc = lab.Scenario(
+        cluster=lab.ClusterSpec(powers=(1.0, 1.0)),
+        workload=lab.WorkloadSpec(
+            trace=lab.TraceRef(path=str(events), format="google",
+                               machine_events=str(mach)),
+            horizon=None),
+        policy=lab.PolicySpec("arrival_only"))
+    failures, _, _ = lab.resolve_fault_schedule(sc)
+    assert failures == ((10.0, 0),)  # on the workload clock, not 610s
+
+
+def test_machine_events_replay_through_runtime(tmp_path):
+    """End-to-end: REMOVE strands work, ADD restores it, UPDATE reshapes a
+    running task's completion — all from one machine_events file."""
+    p = tmp_path / "machines.csv"
+    p.write_text("0,0,0,,1.0,0.5\n"
+                 "2000000,0,2,,0.5,0.5\n")   # halve node 0 at t=2
+    sched = load_google_machine_events(str(p), time_scale=1e-6)
+    tr = TraceSchema(t_arrive=[0.0], works=[8.0], packets=[1.0])
+    rt = ClusterRuntime((2.0,), "jsq", trigger_period=0.0)
+    m = rt.run(tr, failures=sched.failures, joins=sched.joins,
+               resizes=sched.resizes)
+    assert m.makespan == pytest.approx(6.0)  # 4 done by t=2, then power 1
+    assert m.resizes == 1
+
+
 # ---------------------------------------------------------------------------
 # trace_scale synthesizer
 # ---------------------------------------------------------------------------
@@ -265,6 +557,27 @@ def test_trace_scale_preserves_mix_and_burstiness():
     np.testing.assert_array_equal(big.t_arrive, again.t_arrive)
     assert trace_scale(tr, 3.0, seed=8).m != big.m or not np.allclose(
         trace_scale(tr, 3.0, seed=8).t_arrive[:10], big.t_arrive[:10])
+
+
+def test_trace_scale_carries_evictions_and_outcomes():
+    rng = np.random.default_rng(2)
+    m = 500
+    t = np.sort(rng.uniform(0, 100, m))
+    # every task is evicted 1.5 time units after its arrival
+    tr = TraceSchema(t_arrive=t, works=np.full(m, 2.0),
+                     packets=np.full(m, 4.0),
+                     evictions=Evictions(np.arange(m), t + 1.5),
+                     ends_evicted=np.arange(m) % 3 == 0)
+    big = trace_scale(tr, 2.0, seed=9)
+    assert big.preempted
+    # one eviction row per resampled task, dragged along with its arrival:
+    # the evict-minus-arrive offset is preserved for every instance
+    assert big.evictions.k == big.m
+    order = np.argsort(big.evictions.task, kind="stable")
+    np.testing.assert_allclose(
+        big.evictions.time[order] - big.t_arrive[big.evictions.task[order]],
+        1.5, rtol=1e-9)
+    assert 0.2 < big.ends_evicted.mean() < 0.45  # mix preserved
 
 
 def test_trace_scale_thinning_and_validation():
@@ -475,6 +788,76 @@ def test_scaled_trace_seed_sweep_is_an_ensemble():
     assert len(arrived) > 1, "scaled replays must differ across seeds"
 
 
+def _plain_trace_and_machines(tmp_path):
+    """A 2-node csv trace plus a machine_events companion in the same
+    (plain) time units: node 1 halves capacity at t=2."""
+    csv = tmp_path / "plain.csv"
+    csv.write_text("0.0,2.0,4.0\n0.5,2.0,4.0\n1.0,2.0,4.0\n")
+    mach = tmp_path / "machines.csv"
+    mach.write_text("0,0,0,,1.0,0.5\n"
+                    "0,1,0,,1.0,0.5\n"
+                    "2,1,2,,0.5,0.5\n")
+    return csv, mach
+
+
+def test_traceref_machine_events_merges_into_fault_schedule(tmp_path):
+    csv, mach = _plain_trace_and_machines(tmp_path)
+    sc = lab.Scenario(
+        cluster=lab.ClusterSpec(powers=(2.0, 2.0)),
+        workload=lab.WorkloadSpec(
+            trace=lab.TraceRef(path=str(csv), machine_events=str(mach)),
+            horizon=None),
+        policy=lab.PolicySpec("arrival_only"),
+        faults=lab.FaultSpec(failures=((30.0, 0),)))
+    failures, joins, resizes = lab.resolve_fault_schedule(sc)
+    assert (30.0, 0) in failures          # declared faults survive
+    assert resizes == ((2.0, 1, 0.5),)    # trace churn merged in
+    assert lab.Scenario.from_json(sc.to_json()) == sc
+    r = lab.run(sc, backend="events")
+    assert r["completed"] == 3 and r["resizes"] == 1
+    # the machine_events file contents are part of the identity
+    fp = sc.fingerprint()
+    mach.write_text(mach.read_text() + "3,0,1,,,\n")
+    assert sc.fingerprint() != fp
+
+
+def test_traceref_machine_events_eligibility(tmp_path):
+    csv, mach = _plain_trace_and_machines(tmp_path)
+    small = lab.Scenario(
+        cluster=lab.ClusterSpec(powers=(2.0,)),  # fewer nodes than machines
+        workload=lab.WorkloadSpec(
+            trace=lab.TraceRef(path=str(csv), machine_events=str(mach)),
+            horizon=None),
+        policy=lab.PolicySpec("arrival_only"))
+    reason = lab.get_backend("events").eligible(small)
+    assert reason is not None and "2 machines" in reason
+    missing = small.updated({
+        "cluster": {"powers": [2.0, 2.0]},
+        "workload.trace.machine_events": str(tmp_path / "nope.csv")})
+    reason = lab.get_backend("events").eligible(missing)
+    assert reason is not None and "unreadable" in reason
+
+
+def test_traceref_machine_events_on_batched_power_scale(tmp_path):
+    """The fluid backend expresses machine churn as its power up/down
+    schedule — resizes become fractional scales."""
+    csv, mach = _plain_trace_and_machines(tmp_path)
+    sc = lab.Scenario(
+        cluster=lab.ClusterSpec(powers=(2.0, 2.0)),
+        workload=lab.WorkloadSpec(
+            trace=lab.TraceRef(path=str(csv), machine_events=str(mach)),
+            horizon=None),
+        policy=lab.PolicySpec("arrival_only"))
+    assert lab.get_backend("batched").eligible(sc) is None
+    backend = lab.get_backend("batched")
+    scale = backend._power_scale(sc, n_slots=6, n=2, dt=1.0)
+    np.testing.assert_allclose(scale[:, 0], 1.0)
+    np.testing.assert_allclose(scale[:2, 1], 1.0)
+    np.testing.assert_allclose(scale[2:, 1], 0.5)
+    r = lab.run(sc, backend="batched")
+    assert r["completed"] == 3 and r["resizes"] == 1
+
+
 def test_blind_mode_round_trips_and_changes_nothing_unconstrained():
     sc = _lab_scenario(**{"policy.constraint_mode": "blind"})
     assert lab.Scenario.from_json(sc.to_json()) == sc
@@ -502,6 +885,32 @@ def test_cli_trace_info_and_convert(tmp_path, capsys):
     back = load_normalized_csv(str(out_csv),
                                constraints_path=str(out_side))
     assert back.m == 4 and back.constraints.k == 3
+
+
+def test_cli_trace_eviction_mode_and_machine_events(tmp_path, capsys):
+    from repro.lab.cli import main
+    events = tmp_path / "events.csv"
+    events.write_text(
+        "1000000,,7,0,,0,u,0,9,0.5,0.2,\n"
+        "2000000,,7,0,,1,u,0,9,0.5,0.2,\n"
+        "5000000,,7,0,,2,u,0,9,0.5,0.2,\n"
+        "6000000,,7,0,,1,u,0,9,0.5,0.2,\n"
+        "10000000,,7,0,,4,u,0,9,0.5,0.2,\n")
+    mach = tmp_path / "machines.csv"
+    mach.write_text("0,1,0,,1.0,0.5\n4000000,1,2,,0.5,0.5\n")
+    rc = main(["trace", str(events), "--format", "google",
+               "--machine-events", str(mach)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "evictions    1 requeue event(s), 0 task(s) end evicted" in out
+    assert "machines     1: 0 failure(s), 0 join(s), 1 resize(s)" in out
+    # the escape hatch: end mode replays nothing
+    rc = main(["trace", str(events), "--format", "google",
+               "--eviction-mode", "end"])
+    assert rc == 0
+    assert "evictions    0 requeue event(s)" in capsys.readouterr().out
+    with pytest.raises(SystemExit, match="google"):
+        main(["trace", str(events), "--eviction-mode", "end"])
 
 
 def test_cli_run_on_trace_scenario(tmp_path, capsys):
