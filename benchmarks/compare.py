@@ -45,6 +45,12 @@ HIGHER_IS_BETTER = (
     "tier0_improvement",  # constrained PSTS vs blind dispatch margin
     "waste_improvement",  # PSTS vs arrival-only wasted work margin (PR 5)
 )
+# absolute ceilings enforced on the fresh run alone, no baseline needed:
+# wall-clock ratios drift run-to-run (relative gating would be noise) but
+# must stay under a hard bar. Keys match by exact name or prefix.
+ABS_CEILINGS = {
+    "telemetry_overhead_frac": 0.05,  # obs enabled-vs-disabled delta (PR 6)
+}
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = 1e-9
 
@@ -112,6 +118,19 @@ def compare(baseline: dict, fresh: dict, threshold: float,
                     f"{ov:g} -> {nv:g} "
                     f"({ratio * 100.0:+.1f}% vs {budget * 100.0:.0f}% "
                     f"budget)")
+    # absolute ceilings: checked on every fresh record (baseline-less
+    # records included — a brand-new suite is gated from its first run)
+    for key, rec in sorted(fresh.items()):
+        for metric, value in rec["derived"].items():
+            value = _as_number(value)
+            if value is None:
+                continue
+            for name, ceiling in ABS_CEILINGS.items():
+                if (metric == name or metric.startswith(name)) \
+                        and value > ceiling:
+                    regressions.append(
+                        f"EXCEEDED {key[0]}/{key[1]} {metric}: "
+                        f"{value:g} > {ceiling:g} absolute ceiling")
     new_only = sorted(set(fresh) - set(baseline))
     if new_only:
         notes.append(f"NEW      {len(new_only)} record(s) without baseline "

@@ -1,0 +1,158 @@
+"""Render one instrumented run as a timeline figure.
+
+Input is a result JSON produced by ``python -m repro.lab run ... --out``
+(or a bare ``extras["obs"]`` payload): the probe time-series and the
+critical-point monitor stream recorded when the scenario carries an
+``ObsSpec``. Output is a two-panel figure:
+
+* top — hyper-grid imbalance ``I(t)`` per recursion level against the
+  paper's trigger bound ``max(crossover, floor)``, with every trigger
+  fire marked. The fires should sit exactly where the imbalance curve
+  crosses above the bound: the visual form of the crossover criterion.
+* bottom — per-node queue depth over time as a heatmap (occupancy view
+  of the same run).
+
+Usage (CI uploads the output as a bench-job artifact)::
+
+    PYTHONPATH=src python -m repro.lab run scenario.json \
+        --probe-every 1.0 --out result.json
+    PYTHONPATH=src python benchmarks/plot_timeline.py result.json \
+        --out timeline.png
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+INK = "#333330"
+MUTED_INK = "#73726c"
+GRID = "#e8e8e4"
+BOUND = "#e34948"
+FIRE = "#eb6834"
+LEVELS = ("#2a78d6", "#1baf7a", "#4a3aa7", "#eda100", "#e87ba4")
+
+
+def find_obs(payload) -> dict | None:
+    """Locate the first obs payload with a probe series in a result file:
+    a bare obs dict, one RunResult dict, a list of them, or a federated
+    result (``obs.members``) all work."""
+    if isinstance(payload, list):
+        for entry in payload:
+            obs = find_obs(entry)
+            if obs is not None:
+                return obs
+        return None
+    if not isinstance(payload, dict):
+        return None
+    if "probes" in payload:
+        return payload
+    obs = (payload.get("extras") or {}).get("obs") if "extras" in payload \
+        else payload.get("obs")
+    if isinstance(obs, dict):
+        if "probes" in obs:
+            return obs
+        for member in obs.get("members") or []:
+            if isinstance(member, dict) and "probes" in member:
+                return member
+    return None
+
+
+def render(obs: dict, out: str, plt) -> None:
+    probes = obs["probes"]
+    t = probes["t"]
+    fig, (ax_i, ax_q) = plt.subplots(
+        2, 1, figsize=(9.0, 6.0), sharex=True,
+        gridspec_kw={"height_ratios": (3, 2)})
+    fig.patch.set_facecolor("white")
+
+    # -- imbalance vs the trigger bound ---------------------------------
+    # sample-major in the payload (one row per probe sample, one column
+    # per recursion level); transpose to per-level series
+    rows = probes.get("imbalance_by_level") or []
+    for k, series in enumerate(zip(*rows)):
+        ax_i.plot(t, [float("nan") if v is None else v for v in series],
+                  color=LEVELS[k % len(LEVELS)], linewidth=1.6,
+                  label=f"I(t) level {k}")
+    trigger = obs.get("trigger") or {}
+    events = [e for e in (trigger.get("events") or []) if e]
+    if events:
+        et = [e["t"] for e in events]
+        bound = [e.get("bound") for e in events]
+        ax_i.plot(et, [float("nan") if b is None else b for b in bound],
+                  color=BOUND, linewidth=1.2, linestyle="--",
+                  label="bound max(crossover, floor)")
+        fires = [e for e in events if e.get("fired")]
+        if fires:
+            ax_i.scatter([e["t"] for e in fires],
+                         [e.get("imbalance") or 0.0 for e in fires],
+                         color=FIRE, marker="v", s=28, zorder=3,
+                         label=f"trigger fire ({len(fires)})")
+    ax_i.set_ylabel("imbalance  I = T/T_bal − 1", fontsize=9, color=INK)
+    ax_i.legend(fontsize=8, frameon=False, loc="upper right",
+                labelcolor=MUTED_INK)
+
+    # -- per-node queue depth -------------------------------------------
+    depth = probes.get("queue_depth") or []
+    if depth and t:
+        rows = list(map(list, zip(*depth)))  # node-major for imshow
+        im = ax_q.imshow(rows, aspect="auto", origin="lower",
+                         interpolation="nearest", cmap="viridis",
+                         extent=(t[0], t[-1], -0.5, len(rows) - 0.5))
+        fig.colorbar(im, ax=ax_q, label="queue depth (tasks)", pad=0.01)
+    ax_q.set_ylabel("node", fontsize=9, color=INK)
+    ax_q.set_xlabel("simulation time", fontsize=9, color=INK)
+
+    for ax in (ax_i, ax_q):
+        ax.tick_params(labelsize=8, colors=MUTED_INK)
+        for spine in ("top", "right"):
+            ax.spines[spine].set_visible(False)
+        for spine in ("left", "bottom"):
+            ax.spines[spine].set_color(GRID)
+    ax_i.grid(axis="y", color=GRID, linewidth=0.8)
+    ax_i.set_axisbelow(True)
+
+    summary = trigger.get("summary") or {}
+    sub = (f"{summary.get('n_fires', 0)} fires / "
+           f"{summary.get('n_evals', 0)} evals, "
+           f"aligned={summary.get('aligned')}" if summary else "")
+    fig.suptitle("critical-point timeline" + (f" — {sub}" if sub else ""),
+                 fontsize=11, color=INK, x=0.02, ha="left")
+    fig.tight_layout(rect=(0, 0, 1, 0.96))
+    fig.savefig(out, dpi=120)
+    plt.close(fig)
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(
+        description="render an instrumented run's probe + trigger streams "
+                    "as a timeline figure")
+    parser.add_argument("result", help="result JSON from the lab CLI "
+                                       "(--probe-every set), or a bare obs "
+                                       "payload")
+    parser.add_argument("--out", default="timeline.png")
+    args = parser.parse_args()
+    with open(args.result) as fh:
+        payload = json.load(fh)
+    obs = find_obs(payload)
+    if obs is None:
+        print(f"{args.result}: no probe series found — run with "
+              f"--probe-every (events backend) or probe=true (batched)",
+              file=sys.stderr)
+        return 1
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib unavailable; skipping timeline plot",
+              file=sys.stderr)
+        return 0
+    render(obs, args.out, plt)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,6 +64,11 @@ def _suites():
         suites.append(("evictions", bench_evictions.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_obs
+        suites.append(("obs", bench_obs.ALL))
+    except ImportError:
+        pass
     return suites
 
 

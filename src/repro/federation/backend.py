@@ -29,6 +29,7 @@ from ..lab.backends import (
     uniform_but_for_seed,
 )
 from ..lab.result import RunResult, make_metrics
+from ..obs import export_obs
 from ..runtime.metrics import Metrics
 from .runtime import FederatedRuntime
 from .specs import Federation
@@ -90,9 +91,23 @@ class FederatedBackend(Backend):
 
     # -- lockstep events (reference) ----------------------------------------
     def _run_lockstep(self, spec: Federation, members) -> RunResult:
-        report = FederatedRuntime(spec).run()
+        frt = FederatedRuntime(spec)
+        report = frt.run()
         per_member = [_member_result(m, rm)
                       for m, rm in zip(members, report.members)]
+        extras = {
+            "members": [r.to_dict() for r in per_member],
+            "wan": report.wan.to_dict(),
+            "epochs": report.epochs,
+        }
+        if frt.wan_stream is not None:
+            # per-member tracer/probe/monitor payloads plus the epoch-level
+            # WAN stream (member loads + in-flight work over time)
+            extras["obs"] = {
+                "members": [export_obs(ins) if ins.any else None
+                            for ins in frt.instruments],
+                "wan_stream": frt.wan_stream,
+            }
         return RunResult(
             fingerprint=spec.fingerprint(), backend=self.name,
             backend_options={
@@ -102,11 +117,7 @@ class FederatedBackend(Backend):
                 "exchange_period": spec.exchange_period,
             },
             metrics=make_metrics(**report.aggregate.summary()),
-            extras={
-                "members": [r.to_dict() for r in per_member],
-                "wan": report.wan.to_dict(),
-                "epochs": report.epochs,
-            },
+            extras=extras,
             scenario_name=spec.name)
 
     # -- vectorized isolated fast path --------------------------------------

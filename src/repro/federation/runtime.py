@@ -33,6 +33,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..lab.specs import resolve_fault_schedule
+from ..obs import build_instruments
 from ..runtime.metrics import Metrics
 from ..runtime.runtime import ClusterRuntime
 from .balancer import ExchangeStats, admit, choose_destination
@@ -89,8 +90,14 @@ class FederatedRuntime:
         self.links = {(lk.src, lk.dst): lk
                       for lk in federation.topology.resolve(n)}
         self.runtimes: list[ClusterRuntime] = []
+        # per-member telemetry (tracer/probe/monitor trio per cluster); the
+        # WAN stream on top samples federation-level state once per epoch
+        self.instruments = [build_instruments(member.obs)
+                            for member in federation.members]
+        self.wan_stream: list[dict] | None = (
+            [] if any(ins.any for ins in self.instruments) else None)
         self._scheduled = 0
-        for member in federation.members:
+        for member, ins in zip(federation.members, self.instruments):
             rt = ClusterRuntime(
                 member.cluster.resolve_powers(), member.policy.name,
                 d=member.cluster.d,
@@ -99,7 +106,8 @@ class FederatedRuntime:
                 seed=member.engine_seed,
                 policy_kwargs=dict(member.policy.params),
                 node_attrs=member.cluster.resolve_attrs(),
-                constraint_blind=member.policy.constraint_mode == "blind")
+                constraint_blind=member.policy.constraint_mode == "blind",
+                **ins.runtime_kwargs())
             wl = member.workload.materialize(member.seed)
             # each member replays its own churn in lockstep with the rest:
             # declared faults merged with its trace's machine_events, and
@@ -179,6 +187,22 @@ class FederatedRuntime:
                 loads[dst] += task.work
                 surplus -= task.work
 
+    def _sample_wan(self, t: float) -> None:
+        """One federation-level telemetry sample at epoch boundary ``t``:
+        per-member total load plus WAN-in-flight work and cumulative
+        exchange counters. Post-exchange, so the stream shows the state the
+        next epoch starts from."""
+        self.wan_stream.append({
+            "t": t,
+            "member_load": [float(rt.loads(t).sum())
+                            for rt in self.runtimes],
+            "wan_inflight_work": float(sum(
+                w for tl, _, w in self._wan_inflight if tl > t)),
+            "migrations": self.stats.migrations,
+            "moved_units": float(self.stats.moved_units),
+            "rejected": self.stats.rejected,
+        })
+
     def work_census(self, t: float) -> dict:
         """Federation-wide work-unit audit at epoch boundary ``t``: member
         censuses summed, plus WAN transfers still in flight (which sit in
@@ -227,6 +251,8 @@ class FederatedRuntime:
             if self.links:
                 self._exchange(t)
                 self.stats.epochs += 1
+            if self.wan_stream is not None:
+                self._sample_wan(t)
             self._check_conservation(f"at epoch t={t}")
         self._finalize()
         members = [rt.metrics for rt in self.runtimes]

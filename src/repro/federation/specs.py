@@ -190,9 +190,13 @@ class Federation(_SpecBase):
 
     def fingerprint(self) -> str:
         """Stable 16-hex-digit identity of the canonical JSON form (same
-        contract as ``Scenario.fingerprint``)."""
-        canon = json.dumps(self.to_dict(), sort_keys=True,
-                           separators=(",", ":"))
+        contract as ``Scenario.fingerprint``: telemetry config is excluded,
+        member-wise, so an instrumented federation shares the fingerprint
+        of its un-instrumented twin)."""
+        d = self.to_dict()
+        for member in d.get("members", []):
+            member.pop("obs", None)
+        canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(canon.encode()).hexdigest()[:16]
 
     # -- grid support -------------------------------------------------------

@@ -34,6 +34,7 @@ from .result import METRIC_SCHEMA, RunResult, make_metrics
 from .specs import (
     ClusterSpec,
     FaultSpec,
+    ObsSpec,
     PolicySpec,
     Scenario,
     TraceRef,
@@ -45,8 +46,8 @@ __all__ = [
     "BATCH_THRESHOLD", "expand_grid", "run", "sweep",
     "BACKENDS", "BATCHED_POLICIES", "Backend", "BackendError", "get_backend",
     "METRIC_SCHEMA", "RunResult", "make_metrics",
-    "ClusterSpec", "FaultSpec", "PolicySpec", "Scenario", "TraceRef",
-    "WorkloadSpec", "resolve_fault_schedule",
+    "ClusterSpec", "FaultSpec", "ObsSpec", "PolicySpec", "Scenario",
+    "TraceRef", "WorkloadSpec", "resolve_fault_schedule",
     "Federation", "LinkSpec", "TopologySpec",
 ]
 

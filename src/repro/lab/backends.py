@@ -215,6 +215,7 @@ class EventsBackend(Backend):
                 or _constraint_problem(scenario))
 
     def run(self, scenario, **options):
+        from ..obs import build_instruments, export_obs
         from ..runtime.runtime import ClusterRuntime
         from ..traces import TraceSchema
         self.check(scenario)
@@ -223,6 +224,7 @@ class EventsBackend(Backend):
                             f"{sorted(options)}")
         wl = scenario.workload.materialize(scenario.seed)
         failures, joins, resizes = resolve_fault_schedule(scenario)
+        ins = build_instruments(scenario.obs)
         rt = ClusterRuntime(
             scenario.cluster.resolve_powers(), scenario.policy.name,
             d=scenario.cluster.d,
@@ -231,7 +233,8 @@ class EventsBackend(Backend):
             seed=scenario.engine_seed,
             policy_kwargs=dict(scenario.policy.params),
             node_attrs=scenario.cluster.resolve_attrs(),
-            constraint_blind=scenario.policy.constraint_mode == "blind")
+            constraint_blind=scenario.policy.constraint_mode == "blind",
+            **ins.runtime_kwargs())
         m = rt.run(wl, failures=failures, joins=joins, resizes=resizes)
         options = {"model": "discrete-event"}
         if scenario.workload.m_tasks is not None:
@@ -255,6 +258,8 @@ class EventsBackend(Backend):
                 k: v for k, v in rt.work_census().items()
                 if k in ("admitted", "completed", "wasted",
                          "in_flight", "conservation_gap")}
+        if ins.any:
+            extras["obs"] = export_obs(ins)
         return RunResult(
             fingerprint=scenario.fingerprint(), backend=self.name,
             backend_options=options,
@@ -366,6 +371,10 @@ class BatchedBackend(Backend):
             n_nodes=n, n_slots=n_slots, dt=float(dt),
             rebalance=(pol.name == "psts"),
             packets_per_unit=packets_per_unit,
+            # probes lower to scan carry-outs; lifecycle tracing has no
+            # fluid analogue (no per-task identity) and is flagged ignored
+            probe=(base.obs is not None
+                   and base.obs.probe_every is not None),
             **cost)
         slot, works, _ = batch_slots(wls, dt, n_slots)
         scale = self._power_scale(base, n_slots, n, dt)
@@ -398,8 +407,49 @@ class BatchedBackend(Backend):
             scale[s:, node] = frac[node] if up[node] else 0.0
         return scale
 
+    @staticmethod
+    def _obs_extras(bm, i, cfg) -> dict:
+        """Per-scenario telemetry payload from the scan carry-outs, in the
+        same shape the events backend exports (minus the Chrome trace and
+        the hypergrid recursion levels the fluid model does not have)."""
+        def clean(arr):
+            return [float(x) if math.isfinite(x) else None for x in arr]
+        times = (np.arange(cfg.n_slots) * cfg.dt).tolist()
+        imb = bm.probe_imbalance[i]
+        cross = bm.probe_crossover[i]
+        fired = bm.probe_fires[i]
+        probes = {
+            "every": cfg.dt,
+            "t": times,
+            "node_load": [[float(x) for x in row]
+                          for row in bm.probe_queue[i]],
+            "imbalance_by_level": [[v] for v in clean(imb)],
+            "fires": [int(f) for f in fired],
+        }
+        events = [
+            {"t": times[k], "fired": bool(fired[k]),
+             "imbalance": None if not math.isfinite(imb[k])
+             else float(imb[k]),
+             "crossover": None if not math.isfinite(cross[k])
+             else float(cross[k]),
+             "floor": cfg.floor,
+             "bound": None if not math.isfinite(cross[k])
+             else max(float(cross[k]), cfg.floor)}
+            for k in range(cfg.n_slots)
+        ]
+        trigger = {
+            "events": events,
+            "summary": {
+                "n_evals": cfg.n_slots if cfg.rebalance else 0,
+                "n_fires": int(fired.sum()),
+                "n_skips": (cfg.n_slots - int(fired.sum())
+                            if cfg.rebalance else 0),
+            },
+        }
+        return {"probes": probes, "trigger": trigger}
+
     def _result(self, scenario, bm, i, cfg, fault_counts, extra_ignored=(),
-                admitted_work=None):
+                admitted_work=None, extras=None):
         count = int(bm.completed[i])
         moved_units = float(bm.moved_units[i])
         n_failures, n_joins, n_resizes = fault_counts
@@ -434,7 +484,8 @@ class BatchedBackend(Backend):
                    if scenario.workload.m_tasks is not None else [])
                 + list(extra_ignored),
             },
-            metrics=metrics, scenario_name=scenario.name)
+            metrics=metrics, extras=extras or {},
+            scenario_name=scenario.name)
 
     def run(self, scenario, *, dt: float | None = None, **options):
         if options:
@@ -473,8 +524,19 @@ class BatchedBackend(Backend):
                 # model cannot count — flagged, not rejected
                 extra_ignored.append(
                     "workload trace eviction outcomes (ends_evicted)")
+        obs = scenarios[0].obs
+        if obs is not None:
+            if obs.trace:
+                extra_ignored.append(
+                    "obs.trace (no per-task identity in the fluid model)")
+            if cfg.probe:
+                extra_ignored.append(
+                    "obs.probe_every cadence (fluid probes sample every "
+                    "slot, i.e. every dt)")
         return [self._result(sc, bm, i, cfg, fault_counts, extra_ignored,
-                             admitted_work=float(works[i].sum()))
+                             admitted_work=float(works[i].sum()),
+                             extras={"obs": self._obs_extras(bm, i, cfg)}
+                             if cfg.probe else None)
                 for i, sc in enumerate(scenarios)]
 
 
@@ -571,6 +633,8 @@ class LegacyBackend(Backend):
                             "policy.trigger_period", "cluster.bandwidth",
                             "engine_seed"]
                 + (["policy.params.floor"] if "floor" in pol.params
-                   else []),
+                   else [])
+                + (["obs (static snapshot: no timeline to trace or probe)"]
+                   if scenario.obs is not None else []),
             },
             metrics=metrics, extras=extras, scenario_name=scenario.name)

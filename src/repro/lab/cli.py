@@ -27,6 +27,7 @@ from .backends import BACKENDS
 from .specs import (
     ClusterSpec,
     FaultSpec,
+    ObsSpec,
     PolicySpec,
     Scenario,
     WorkloadSpec,
@@ -234,6 +235,14 @@ def main(argv: list[str] | None = None) -> int:
     p_run.add_argument("--dt", type=float, default=None,
                        help="slot width (batched backend only)")
     p_run.add_argument("--out", default=None, help="write result JSON here")
+    p_run.add_argument("--trace-out", default=None, metavar="FILE",
+                       help="record a task-lifecycle trace and write it "
+                            "here as Chrome-trace JSON (load in "
+                            "chrome://tracing or Perfetto; events backend)")
+    p_run.add_argument("--probe-every", type=float, default=None,
+                       metavar="SECONDS",
+                       help="sample occupancy/queue-depth/imbalance "
+                            "time-series on this cadence (sim time units)")
 
     p_sweep = sub.add_parser("sweep", help="run a grid over a base scenario")
     p_sweep.add_argument("scenario")
@@ -305,8 +314,34 @@ def main(argv: list[str] | None = None) -> int:
         if args.dt is not None and args.backend != "batched":
             raise SystemExit(f"--dt sets the batched backend's slot width; "
                              f"it does nothing on {args.backend!r}")
+        if args.trace_out or args.probe_every is not None:
+            if getattr(scenario, "is_federation", False):
+                raise SystemExit(
+                    "--trace-out/--probe-every instrument a single "
+                    "Scenario; for a Federation set an \"obs\" section on "
+                    "the member(s) to instrument in the spec file")
+            scenario = scenario.replace(obs=ObsSpec(
+                trace=args.trace_out is not None,
+                probe_every=args.probe_every))
         opts = {"dt": args.dt} if args.dt is not None else {}
-        _emit([run(scenario, backend=args.backend, **opts)], args.out)
+        result = run(scenario, backend=args.backend, **opts)
+        if args.trace_out:
+            obs = result.extras.get("obs") or {}
+            trace = obs.pop("chrome_trace", None)
+            if trace is None:
+                raise SystemExit(
+                    f"--trace-out: the {args.backend!r} backend records no "
+                    f"per-task trace (see backend_options['ignored']); run "
+                    f"on the events backend")
+            Path(args.trace_out).write_text(
+                json.dumps(trace, allow_nan=False) + "\n")
+            print(f"wrote {trace['otherData']['n_events']} trace event(s) "
+                  f"to {args.trace_out}")
+        elif isinstance(result.extras.get("obs"), dict):
+            # keep stdout/--out payloads readable: the full event list is
+            # only emitted when a --trace-out destination asks for it
+            result.extras["obs"].pop("chrome_trace", None)
+        _emit([result], args.out)
         return 0
 
     # sweep

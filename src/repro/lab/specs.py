@@ -41,6 +41,7 @@ __all__ = [
     "TraceRef",
     "FaultSpec",
     "PolicySpec",
+    "ObsSpec",
     "Scenario",
     "resolve_fault_schedule",
 ]
@@ -151,7 +152,12 @@ class ClusterSpec(_SpecBase):
             if any(p <= 0 for p in self.powers):
                 raise ValueError("powers must be > 0")
         if self.attrs is not None:
-            frozen = _freeze({str(k): tuple(float(x) for x in v)
+            # same codec as trace constraint values: numeric stays itself,
+            # an opaque string becomes its stable 48-bit hash code — so
+            # spec files round-trip as plain floats and string-valued
+            # trace predicates (==/!=) match exactly
+            from ..traces.schema import hash_attr_value
+            frozen = _freeze({str(k): tuple(hash_attr_value(x) for x in v)
                               for k, v in dict(self.attrs).items()})
             for name, vals in frozen.items():
                 if len(vals) != self.size:
@@ -442,6 +448,31 @@ class PolicySpec(_SpecBase):
         object.__setattr__(self, "params", _frozen_params(self.params))
 
 
+@dataclass(frozen=True)
+class ObsSpec(_SpecBase):
+    """Telemetry to collect while the scenario runs (:mod:`repro.obs`).
+
+    ``trace`` records per-task lifecycle spans and per-decision scheduler
+    latency (Chrome-trace export lands in ``extras["obs"]["chrome_trace"]``);
+    ``probe_every`` samples the live-cluster probe series on that cadence
+    (simulated time units); ``ring`` bounds tracer memory to the newest N
+    events. Telemetry never changes what the experiment *is*: ``obs`` is
+    excluded from :meth:`Scenario.fingerprint`, and the conformance tests
+    assert it changes no metric.
+    """
+
+    trace: bool = True
+    probe_every: float | None = None
+    ring: int | None = None
+
+    def __post_init__(self):
+        if self.probe_every is not None and not self.probe_every > 0:
+            raise ValueError(
+                f"probe_every must be > 0, got {self.probe_every}")
+        if self.ring is not None and self.ring <= 0:
+            raise ValueError(f"ring must be > 0, got {self.ring}")
+
+
 def resolve_fault_schedule(scenario) -> tuple[tuple, tuple, tuple]:
     """The scenario's complete ``(failures, joins, resizes)`` schedule:
     declared :class:`FaultSpec` events merged with the capacity churn of
@@ -475,7 +506,7 @@ def resolve_fault_schedule(scenario) -> tuple[tuple, tuple, tuple]:
 
 
 _SECTIONS = {"cluster": ClusterSpec, "workload": WorkloadSpec,
-             "policy": PolicySpec, "faults": FaultSpec}
+             "policy": PolicySpec, "faults": FaultSpec, "obs": ObsSpec}
 
 
 @dataclass(frozen=True)
@@ -494,6 +525,10 @@ class Scenario(_SpecBase):
     seed: int = 0
     engine_seed: int = 0
     name: str = ""
+    # what telemetry to collect (None = no instrumentation, zero cost);
+    # deliberately NOT part of the fingerprint — observing an experiment
+    # does not change which experiment it is
+    obs: ObsSpec | None = None
 
     # -- serialization ------------------------------------------------------
     @classmethod
@@ -507,6 +542,15 @@ class Scenario(_SpecBase):
         if unknown:
             raise ValueError(f"Scenario: unknown fields {sorted(unknown)}")
         return cls(**d)
+
+    def to_dict(self) -> dict:
+        # an un-instrumented scenario serializes exactly as it did before
+        # telemetry existed — old spec files and sweep-uniformity keys are
+        # unaffected
+        d = _thaw(self)
+        if self.obs is None:
+            d.pop("obs", None)
+        return d
 
     def to_json(self, *, indent: int | None = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
@@ -523,8 +567,11 @@ class Scenario(_SpecBase):
         collide in sweep caches or result attribution, and a trace edited
         between runs is a different experiment.
         """
-        canon = json.dumps(self.to_dict(), sort_keys=True,
-                           separators=(",", ":"))
+        d = self.to_dict()
+        # telemetry is not identity: an instrumented run must attribute to
+        # the same experiment as its un-instrumented twin
+        d.pop("obs", None)
+        canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
         digest = self.workload.content_digest()
         if digest is not None:
             canon += f"|trace-sha256:{digest}"
@@ -556,5 +603,5 @@ def _spec_hash(self) -> int:
 
 
 for _cls in (ClusterSpec, WorkloadSpec, TraceRef, FaultSpec, PolicySpec,
-             Scenario):
+             ObsSpec, Scenario):
     _cls.__hash__ = _spec_hash

@@ -1,0 +1,47 @@
+"""Telemetry subsystem: lifecycle tracing, live probes, trigger monitoring.
+
+Three instruments, all zero-cost when absent (the runtime guards every
+hook behind an ``is not None`` check and the batched backend compiles the
+probe carry-outs away when the static flag is off):
+
+- :class:`Tracer` — per-task lifecycle spans (submit -> dispatch -> start
+  -> migrate/evict/resize -> complete) and per-decision scheduler latency,
+  exported as Chrome-trace / Perfetto JSON, with a bounded-memory ring mode.
+- :class:`ProbeSeries` — sampled time-series: per-node occupancy, queue
+  depth, per-tier queued work, and hyper-grid imbalance at every recursion
+  level.
+- :class:`CriticalPointMonitor` — evaluates the paper's trigger bound
+  online against the sampled imbalance signal and keeps structured
+  trigger/skip events.
+
+``build_instruments`` / ``export_obs`` are the glue the lab backends and
+``FederatedRuntime`` use to turn an ``ObsSpec`` into live instruments and
+back into ``RunResult.extras["obs"]``.
+"""
+
+from .monitor import CriticalPointMonitor
+from .probe import ProbeSeries, imbalance_by_level
+from .tracer import (
+    NULL_TRACER,
+    PID_NODES,
+    PID_SCHED,
+    PID_TASKS,
+    NullTracer,
+    Tracer,
+)
+from .wire import Instruments, build_instruments, export_obs
+
+__all__ = [
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "PID_NODES",
+    "PID_TASKS",
+    "PID_SCHED",
+    "ProbeSeries",
+    "imbalance_by_level",
+    "CriticalPointMonitor",
+    "Instruments",
+    "build_instruments",
+    "export_obs",
+]

@@ -1,0 +1,62 @@
+"""Glue between `lab.ObsSpec` and live instruments.
+
+Kept here (not in ``lab``) so `ClusterRuntime`-level code — including
+``FederatedRuntime``, which builds member runtimes itself — can
+instantiate instruments without importing the lab layer. The spec is
+duck-typed: anything with ``trace`` / ``probe_every`` / ``ring``
+attributes works.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .monitor import CriticalPointMonitor
+from .probe import ProbeSeries
+from .tracer import Tracer
+
+__all__ = ["Instruments", "build_instruments", "export_obs"]
+
+
+@dataclass
+class Instruments:
+    tracer: Tracer | None = None
+    probe: ProbeSeries | None = None
+    monitor: CriticalPointMonitor | None = None
+
+    @property
+    def any(self) -> bool:
+        return (self.tracer is not None or self.probe is not None
+                or self.monitor is not None)
+
+    def runtime_kwargs(self) -> dict:
+        """Keyword arguments for ``ClusterRuntime(...)``."""
+        return {"tracer": self.tracer, "probe": self.probe,
+                "trigger_monitor": self.monitor}
+
+
+def build_instruments(spec) -> Instruments:
+    """ObsSpec -> live instruments; a None spec yields empty Instruments."""
+    if spec is None:
+        return Instruments()
+    tracer = Tracer(ring=spec.ring) if spec.trace else None
+    probe = (ProbeSeries(spec.probe_every)
+             if spec.probe_every is not None else None)
+    return Instruments(tracer=tracer, probe=probe,
+                       monitor=CriticalPointMonitor())
+
+
+def export_obs(ins: Instruments, *, include_trace: bool = True) -> dict:
+    """Instruments -> the JSON-safe ``RunResult.extras["obs"]`` payload."""
+    out: dict = {}
+    if ins.tracer is not None:
+        out["decision_stats"] = ins.tracer.decision_stats()
+        out["trace_events"] = ins.tracer.n_events
+        out["trace_dropped"] = ins.tracer.n_dropped
+        if include_trace:
+            out["chrome_trace"] = ins.tracer.to_chrome_trace()
+    if ins.probe is not None:
+        out["probes"] = ins.probe.to_dict()
+    if ins.monitor is not None:
+        out["trigger"] = ins.monitor.to_dict()
+    return out

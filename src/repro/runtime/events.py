@@ -34,6 +34,10 @@ class EventKind(IntEnum):
     MIGRATION_ARRIVE = 5
     ARRIVAL = 6
     TRIGGER_EVAL = 7
+    # telemetry sampling resolves after everything else at an instant, so a
+    # probe sees the state the instant leaves behind (including a trigger's
+    # migrations); purely observational — never mutates cluster state
+    PROBE_SAMPLE = 8
 
 
 @dataclass(frozen=True)

@@ -31,12 +31,14 @@ reports through the shared ``Metrics`` accumulator.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..core.hypergrid import HyperGrid, embed, optimal_dim
 from ..core.psts import psts_schedule
+from ..obs.tracer import PID_NODES, PID_SCHED
 from .events import EventKind, EventQueue
 from .metrics import Metrics
 from .policies import Policy, make_policy
@@ -111,7 +113,8 @@ class ClusterRuntime:
                  bandwidth: float = 64.0, seed: int = 0,
                  policy_kwargs: dict | None = None,
                  node_attrs: dict | None = None,
-                 constraint_blind: bool = False):
+                 constraint_blind: bool = False,
+                 tracer=None, probe=None, trigger_monitor=None):
         powers = np.asarray(powers, dtype=np.float64)
         self._base_powers = powers.copy()   # nominal, never mutated
         self._powers_full = powers.copy()   # current (resize-adjusted)
@@ -147,6 +150,21 @@ class ClusterRuntime:
         # task never lands on an infeasible node) but hides the mask from
         # the policy — the constraint-unaware baseline trace benchmarks use
         self.constraint_blind = bool(constraint_blind)
+        # telemetry (repro.obs): every hook below guards on `is not None`,
+        # so a bare runtime pays nothing — the conformance tests assert
+        # enabling these changes no Metrics.summary() value
+        self._tr = tracer
+        self._probe = probe
+        self._mon = trigger_monitor
+        # probe fast path: queued work per node / per tier maintained
+        # incrementally at every queue mutation, so a probe sample is
+        # O(nodes) instead of O(queued tasks). Only kept while probes are
+        # enabled (the accumulators feed nothing else); incremental
+        # subtraction leaves float residue ~1e-13, clamped at sample time
+        self._track = probe is not None
+        self._queued_work = [0.0] * self.grid.capacity
+        self._queued_tier: dict[int, float] = {}
+        self._dec_count = 0  # placement-latency sampling clock (1-in-8)
 
     # -- state inspection ---------------------------------------------------
     def _progress(self, task: Task, node: int, t: float) -> float:
@@ -244,11 +262,22 @@ class ClusterRuntime:
         fmask = task.feasible
         view_mask = None if (fmask is None or self.constraint_blind) \
             else fmask
+        # placement latency is sampled 1-in-8 (deterministically): the
+        # clock-read + record pair costs a sizeable fraction of a cheap
+        # placement, and per-decision stats only need a representative
+        # sample, not a census. Trigger/rebalance decisions are orders of
+        # magnitude rarer and stay fully timed.
+        _timed = self._tr is not None and (self._dec_count & 7) == 0
+        if self._tr is not None:
+            self._dec_count += 1
+        _t0 = time.perf_counter() if _timed else 0.0
         try:
             node = self.policy.on_arrival(task.work, task.packets,
                                           self.view(t, feasible=view_mask))
         except ValueError:  # e.g. positional rule with zero active power
             node = -1
+        if _timed:
+            self._tr.decision("place", time.perf_counter() - _t0)
         ok = (0 <= node < self.grid.capacity and self.grid.active[node]
               and (fmask is None or fmask[node]))
         if not ok:
@@ -271,8 +300,25 @@ class ClusterRuntime:
                 node = 0  # total outage: park until a join
         task.node = node
         task.placements.append((t, node))
-        self._queues[node].append(task)
+        # no "dispatch" instant: per-arrival events are the telemetry
+        # overhead budget's hottest line, and the placement outcome is
+        # already in the trace (service span carries the node, evict/
+        # migrate/fail events mark every re-placement cause)
+        self._enqueue(node, task)
         self._try_start(node, t)
+
+    def _enqueue(self, node: int, task: Task) -> None:
+        self._queues[node].append(task)
+        if self._track:
+            self._queued_work[node] += task.work
+            tiers = self._queued_tier
+            tiers[task.priority] = tiers.get(task.priority, 0.0) + task.work
+
+    def _unqueue(self, node: int, task: Task) -> None:
+        """Probe accounting for a task leaving ``node``'s queue; callers
+        remove the task from the queue list themselves."""
+        self._queued_work[node] -= task.work
+        self._queued_tier[task.priority] -= task.work
 
     def _try_start(self, node: int, t: float) -> None:
         if self._running[node] is not None or not self._queues[node]:
@@ -283,9 +329,12 @@ class ClusterRuntime:
         # nonpreemptive priority service: best tier first, FIFO within tier
         i = min(range(len(q)), key=lambda j: (q[j].priority, j))
         task = q.pop(i)
+        if self._track:
+            self._unqueue(node, task)
         task.t_start = t
         task.t_attempt_start = t
         self._running[node] = task
+        # no "start" instant: the start time is the "service" span's start
         service = (task.work - task.work_done) / self.grid.powers[node]
         self._eq.push(t + service, EventKind.COMPLETION,
                       (task, node, task.token))
@@ -294,6 +343,10 @@ class ClusterRuntime:
         """Stop a running task and discard the attempt's progress (wasted
         work); the task owes its full demand again. Leaves the node free —
         the caller decides where the task goes next."""
+        if self._tr is not None and task.t_attempt_start is not None:
+            self._tr.span("service", task.t_attempt_start, t, tid=task.tid,
+                          cat="service",
+                          args={"node": node, "interrupted": True})
         self.metrics.wasted_work += self._progress(task, node, t)
         task.t_start = None
         task.t_attempt_start = None
@@ -307,6 +360,9 @@ class ClusterRuntime:
         Re-placement happens best tier first (same order as admission)."""
         stranded = list(self._queues[node])
         self._queues[node] = []
+        if self._track:
+            for task in stranded:
+                self._unqueue(node, task)
         r = self._running[node]
         if r is not None:
             self._interrupt(r, node, t)
@@ -351,19 +407,30 @@ class ClusterRuntime:
                 dst = int(dst)
                 if dst == task.node:
                     continue
+                delay = task.packets / self.bandwidth
+                if self._tr is not None:
+                    # flight time is deterministic, so the whole span is
+                    # known at departure — no begin/end bookkeeping needed
+                    self._tr.span("migrate", t, t + delay, tid=task.tid,
+                                  cat="migrate",
+                                  args={"src": task.node, "dst": dst})
                 self._queues[task.node].remove(task)
+                if self._track:
+                    self._unqueue(task.node, task)
                 task.node = -1
                 task.migrations += 1
                 self._in_flight.add(task.tid)
                 self.metrics.migrations += 1
                 self.metrics.moved_packets += task.packets
                 self.metrics.moved_units += task.work
-                delay = task.packets / self.bandwidth
                 self._eq.push(t + delay, EventKind.MIGRATION_ARRIVE,
                               (task, dst))
 
     # -- event handlers -----------------------------------------------------
     def _on_arrival(self, task: Task, t: float) -> None:
+        # no "submit" instant: the submit time is the "task" span's start
+        # (emitted at completion), and per-event cost here is the telemetry
+        # overhead budget's hottest line
         self.metrics.observe_arrival(work=task.work)
         self.tasks[task.tid] = task
         self._place(task, t)
@@ -389,6 +456,21 @@ class ClusterRuntime:
             response=t - task.t_arrive,
             wait=t_started - task.t_arrive,
             t_finish=t, tier=task.priority, work=task.work)
+        if self._tr is not None:
+            # the completed attempt's service span carries no args dict
+            # (an args-free record leaves nothing GC-tracked behind); the
+            # serving node rides on the task span instead, and
+            # ``interrupted`` service spans are only emitted by
+            # ``_interrupt``, so its absence here is unambiguous
+            self._tr.span("service", t_started, t, tid=task.tid,
+                          cat="service")
+            self._tr.span("task", task.t_arrive, t, tid=task.tid,
+                          cat="lifecycle",
+                          args={"work": task.work, "tier": task.priority,
+                                "node": node,
+                                "migrations": task.migrations,
+                                "evictions": task.evictions,
+                                "restarts": task.restarts})
         self._try_start(node, t)
 
     def _on_eviction(self, tid: int, t: float) -> None:
@@ -400,6 +482,10 @@ class ClusterRuntime:
         task = self.tasks.get(tid)
         if task is None or task.t_finish is not None:
             return
+        if self._tr is not None and (task.t_start is not None
+                                     or task.node >= 0):
+            self._tr.instant("evict", t, tid=tid, cat="lifecycle",
+                             args={"running": task.t_start is not None})
         if task.t_start is not None:  # running: the attempt is lost
             node = task.node
             self._interrupt(task, node, t)
@@ -409,6 +495,8 @@ class ClusterRuntime:
             self._try_start(node, t)
         elif task.node >= 0:  # queued: requeued through the policy
             self._queues[task.node].remove(task)
+            if self._track:
+                self._unqueue(task.node, task)
             task.node = -1
             task.evictions += 1
             self.metrics.evictions += 1
@@ -430,6 +518,9 @@ class ClusterRuntime:
         if not self.grid.active[node]:
             return  # applies when the node rejoins
         self.metrics.resizes += 1
+        if self._tr is not None:
+            self._tr.instant("resize", t, pid=PID_NODES, tid=node,
+                             cat="node", args={"fraction": float(fraction)})
         r = self._running[node]
         if r is not None:  # bank progress at the old rate first
             r.work_done = self._progress(r, node, t)
@@ -445,6 +536,11 @@ class ClusterRuntime:
 
     def _on_migration_arrive(self, task: Task, dst: int, t: float) -> None:
         self._in_flight.discard(task.tid)
+        if self._tr is not None and dst < 0:
+            # an injected hand-off from another cluster (local migrations
+            # record their full span at departure — the flight time is
+            # deterministic, so there is nothing left to learn on arrival)
+            self._tr.instant("land", t, tid=task.tid, cat="migrate")
         if dst < 0 or not self.grid.active[dst]:
             # dst < 0: an injected federation hand-off, placed by the local
             # policy on landing; otherwise the destination died in flight
@@ -452,13 +548,15 @@ class ClusterRuntime:
             return
         task.node = dst
         task.placements.append((t, dst))
-        self._queues[dst].append(task)
+        self._enqueue(dst, task)
         self._try_start(dst, t)
 
     def _on_fail(self, node: int, t: float) -> None:
         if not self.grid.active[node]:
             return
         self.metrics.failures += 1
+        if self._tr is not None:
+            self._tr.instant("fail", t, pid=PID_NODES, tid=node, cat="node")
         self.grid = self.grid.fail(node)
         for task in self._strand(node, t):
             self._place(task, t)
@@ -467,6 +565,8 @@ class ClusterRuntime:
         if self.grid.active[node] or node >= self._powers_full.size:
             return
         self.metrics.joins += 1
+        if self._tr is not None:
+            self._tr.instant("join", t, pid=PID_NODES, tid=node, cat="node")
         powers = self.grid.powers.copy()
         active = self.grid.active.copy()
         powers[node] = self._powers_full[node]
@@ -478,6 +578,8 @@ class ClusterRuntime:
             if self._queues[nd]:
                 parked, self._queues[nd] = self._queues[nd], []
                 for task in parked:
+                    if self._track:
+                        self._unqueue(nd, task)
                     task.node = -1
                     self._place(task, t)
         self._try_start(node, t)
@@ -492,17 +594,89 @@ class ClusterRuntime:
                 [task.packets for q in self._queues for task in q])
             works = [task.work for q in self._queues for task in q]
             est = excess * mean_packets / max(np.mean(works), 1e-12)
+            _t0 = time.perf_counter() if self._tr is not None else 0.0
             dec = self.policy.wants_rebalance(self.view(t), queued, est)
+            if self._tr is not None:
+                self._tr.decision("trigger", time.perf_counter() - _t0)
             if dec is not None:
                 self.metrics.trigger_evals += 1
+                if self._mon is not None:
+                    self._mon.record(
+                        t, dec, floor=float(getattr(self.policy, "floor",
+                                                    0.0)),
+                        moved_packets=est)
+                if self._tr is not None:
+                    self._tr.instant(
+                        "trigger_fire" if dec.trigger else "trigger_skip",
+                        t, pid=PID_SCHED, tid=0, cat="trigger",
+                        args={"fired": bool(dec.trigger)})
                 if dec.trigger:
                     self.metrics.trigger_fires += 1
+                    _t1 = (time.perf_counter() if self._tr is not None
+                           else 0.0)
                     self._rebalance(t)
+                    if self._tr is not None:
+                        self._tr.decision("rebalance",
+                                          time.perf_counter() - _t1)
         # re-arm only while there is work left to schedule
         if self._outstanding() or self._eq.pending(
                 EventKind.ARRIVAL, EventKind.MIGRATION_ARRIVE,
                 EventKind.COMPLETION):
             self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
+
+    def _on_probe(self, t: float) -> None:
+        """Sample the probe series and re-arm on its cadence; purely
+        observational, mirrors the trigger chain's arming rules."""
+        self._probe.observe(self, t)
+        if self._outstanding() or self._eq.pending(
+                EventKind.ARRIVAL, EventKind.MIGRATION_ARRIVE,
+                EventKind.COMPLETION):
+            self._eq.push(t + self._probe.every, EventKind.PROBE_SAMPLE)
+
+    def probe_snapshot(self, t: float) -> dict:
+        """Raw fields a :class:`repro.obs.ProbeSeries` samples: per-node
+        load, queue depth (queued + running count), per-tier queued work,
+        and live-task counters. Arrays are capacity-length (virtual slots
+        included, always zero).
+
+        O(nodes) when the incremental accounting is live (probes enabled
+        at construction): per-node load = clamped queued-work accumulator
+        plus each running task's remaining work. The O(tasks) fallback
+        keeps ad-hoc sampling of un-probed runtimes working."""
+        queue_depth = [len(q) + (self._running[n] is not None)
+                       for n, q in enumerate(self._queues)]
+        if self._track:
+            # pure-python floats throughout: numpy scalar arithmetic on
+            # 16-element state costs ~10us a sample. Clamp the ~1e-13
+            # incremental residue — a phantom load on a powerless slot
+            # would read as stranded work (inf imbalance) downstream
+            node_load = [w if w > 1e-9 else 0.0 for w in self._queued_work]
+            powers = self.grid.powers.tolist()
+            for n, r in enumerate(self._running):
+                if r is not None:
+                    done = r.work_done + (t - r.t_start) * powers[n]
+                    w = r.work
+                    if done < 0.0:
+                        done = 0.0
+                    elif done > w:
+                        done = w
+                    node_load[n] += w - done
+            tier_work = {tier: w for tier, w in self._queued_tier.items()
+                         if w > 1e-9}
+        else:
+            node_load = self.loads(t)
+            tier_work = {}
+            for q in self._queues:
+                for task in q:
+                    tier_work[task.priority] = (
+                        tier_work.get(task.priority, 0.0) + task.work)
+        return {
+            "node_load": node_load,
+            "queue_depth": queue_depth,
+            "tier_work": tier_work,
+            "in_flight": len(self._in_flight),
+            "queued_tasks": sum(len(q) for q in self._queues),
+        }
 
     # -- federation hand-off ------------------------------------------------
     def queued_tasks(self) -> list[Task]:
@@ -516,6 +690,8 @@ class ClusterRuntime:
         if task.node < 0 or task not in self._queues[task.node]:
             raise ValueError(f"task {task.tid} is not queued here")
         self._queues[task.node].remove(task)
+        if self._track:
+            self._unqueue(task.node, task)
         self.tasks.pop(task.tid, None)
         task.node = -1
 
@@ -531,6 +707,9 @@ class ClusterRuntime:
         if (self.policy.uses_trigger and self.trigger_period > 0
                 and not self._eq.pending(EventKind.TRIGGER_EVAL)):
             self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
+        if (self._probe is not None
+                and not self._eq.pending(EventKind.PROBE_SAMPLE)):
+            self._eq.push(t + self._probe.every, EventKind.PROBE_SAMPLE)
 
     def _resolve_feasibility(self, workload) -> list | None:
         """Per-task feasibility masks over grid slots, or ``None`` for
@@ -615,6 +794,9 @@ class ClusterRuntime:
         if (self.policy.uses_trigger and self.trigger_period > 0
                 and not self._eq.pending(EventKind.TRIGGER_EVAL)):
             self._eq.push(self.trigger_period, EventKind.TRIGGER_EVAL)
+        if (self._probe is not None
+                and not self._eq.pending(EventKind.PROBE_SAMPLE)):
+            self._eq.push(self._probe.every, EventKind.PROBE_SAMPLE)
 
     def _dispatch(self, ev) -> None:
         if ev.kind == EventKind.ARRIVAL:
@@ -633,6 +815,8 @@ class ClusterRuntime:
             self._on_resize(*ev.payload, ev.time)
         elif ev.kind == EventKind.TRIGGER_EVAL:
             self._on_trigger_eval(ev.time)
+        elif ev.kind == EventKind.PROBE_SAMPLE:
+            self._on_probe(ev.time)
 
     def step_until(self, t: float, *, max_events: int = 2_000_000) -> int:
         """Process every event at time <= ``t`` (the lockstep primitive the

@@ -61,6 +61,10 @@ class VectorConfig:
     t_task: float = 1e-4            # per-task placement cost
     packets_per_step: float = 64.0
     packets_per_unit: float = 2.0   # migration packets per work unit
+    # telemetry: emit per-slot probe series (queue snapshot, imbalance,
+    # crossover, fire flag) as extra scan carry-outs. Static, so the
+    # disabled variant compiles the probe outputs away entirely
+    probe: bool = False
 
     @property
     def scan_steps(self) -> int:
@@ -78,6 +82,14 @@ class BatchMetrics:
     trigger_fires: np.ndarray
     moved_units: np.ndarray
     completed: np.ndarray
+    # probe series (cfg.probe only, else None): sampled once per slot at
+    # the backlog point — after arrivals and the trigger's redistribution,
+    # before service. Imbalance/crossover are the values the trigger
+    # evaluated (pre-redistribution); an idle slot reads imbalance -1
+    probe_queue: np.ndarray | None = None       # (B, T, n)
+    probe_imbalance: np.ndarray | None = None   # (B, T)
+    probe_crossover: np.ndarray | None = None   # (B, T)
+    probe_fires: np.ndarray | None = None       # (B, T) bool
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +135,10 @@ def simulate_scalar(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
     resp = np.zeros(works.shape[0])
     fires, moved, seen = 0, 0.0, 0.0
     backlog = np.zeros(T)
+    probe_q = np.zeros((T, n)) if cfg.probe else None
+    probe_imb = np.zeros(T) if cfg.probe else None
+    probe_cross = np.zeros(T) if cfg.probe else None
+    probe_fire = np.zeros(T, dtype=bool) if cfg.probe else None
     for t in range(T):
         mask = slot == t
         pw = powers * scale[t]
@@ -142,25 +158,36 @@ def simulate_scalar(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
                                    np.maximum(pw[owner], _TINY), 0.0)
             np.add.at(queue, owner[mask], works[mask])
             seen += cnt[t]
-        # -- crossover trigger (fluid redistribution of queued work)
-        if cfg.rebalance:
+        # -- crossover trigger (fluid redistribution of queued work); the
+        # probe reads the same formulas, so the trigger signal it exports
+        # is exactly what the decision saw (the guarded max(., _TINY)
+        # denominators are identical to the old t_bal > _TINY branch
+        # whenever that branch ran)
+        if cfg.rebalance or cfg.probe:
             w = queue.sum()
             t_bal = w / pi if pi > 0.0 else 0.0
-            if t_bal > _TINY:
-                with np.errstate(divide="ignore", invalid="ignore"):
-                    ratio = np.where(pw > 0.0, queue / np.maximum(pw, _TINY),
-                                     np.where(queue > _TINY, np.inf, 0.0))
-                imb = ratio.max() / t_bal - 1.0
-                fair_q = pw / pi * w
-                excess = np.maximum(queue - fair_q, 0.0).sum()
-                overhead = (cfg.scan_steps * (cfg.p + cfg.q)
-                            + seen / n * cfg.t_task
-                            + excess * cfg.packets_per_unit
-                            / cfg.packets_per_step * cfg.p)
-                if imb > max(overhead / t_bal, cfg.floor):
-                    queue = fair_q
-                    moved += excess
-                    fires += 1
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ratio = np.where(pw > 0.0, queue / np.maximum(pw, _TINY),
+                                 np.where(queue > _TINY, np.inf, 0.0))
+            imb = ratio.max() / max(t_bal, _TINY) - 1.0
+            fair_q = pw / max(pi, _TINY) * w
+            excess = np.maximum(queue - fair_q, 0.0).sum()
+            overhead = (cfg.scan_steps * (cfg.p + cfg.q)
+                        + seen / n * cfg.t_task
+                        + excess * cfg.packets_per_unit
+                        / cfg.packets_per_step * cfg.p)
+            cross = overhead / max(t_bal, _TINY)
+            fire = (cfg.rebalance and t_bal > _TINY
+                    and imb > max(cross, cfg.floor))
+            if fire:
+                queue = fair_q
+                moved += excess
+                fires += 1
+            if cfg.probe:
+                probe_q[t] = queue
+                probe_imb[t] = imb
+                probe_cross[t] = cross
+                probe_fire[t] = fire
         # -- service (backlog sampled before draining, so a slot that both
         # receives and finishes work still counts as busy)
         backlog[t] = queue.sum()
@@ -169,7 +196,7 @@ def simulate_scalar(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
     count = float(cnt.sum())
     drained = np.flatnonzero(backlog > _TINY)
     valid = slot < T
-    return {
+    out = {
         "mean_response": float(resp.sum() / count) if count else float("nan"),
         "p99_response": nearest_rank(resp[valid], 99.0),
         "makespan": float((drained[-1] + 1) * cfg.dt) if drained.size else 0.0,
@@ -177,6 +204,10 @@ def simulate_scalar(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
         "moved_units": float(moved),
         "completed": count,
     }
+    if cfg.probe:
+        out.update(probe_queue=probe_q, probe_imbalance=probe_imb,
+                   probe_crossover=probe_cross, probe_fires=probe_fire)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -229,15 +260,16 @@ def _simulate_batch_jax(slot, works, powers, scale, cfg: VectorConfig):
             mask, (q_own + works) / jnp.maximum(pw_own, _TINY), 0.0)
         queue = queue.at[rows, owner].add(jnp.where(mask, works, 0.0))
         seen = seen + cnt[:, t]
-        # -- crossover trigger
-        if cfg.rebalance:
+        # -- crossover trigger (and/or the probe's trigger signal — same
+        # formulas as simulate_scalar, see the note there)
+        if cfg.rebalance or cfg.probe:
             w = queue.sum(axis=1, keepdims=True)
             t_bal = jnp.where(pi > 0.0, w / jnp.maximum(pi, _TINY), 0.0)
             ratio = jnp.where(pw > 0.0, queue / jnp.maximum(pw, _TINY),
                               jnp.where(queue > _TINY, jnp.inf, 0.0))
             imb = ratio.max(axis=1, keepdims=True) \
                 / jnp.maximum(t_bal, _TINY) - 1.0
-            fair_q = pw / pi * w
+            fair_q = pw / jnp.maximum(pi, _TINY) * w
             excess = jnp.maximum(queue - fair_q, 0.0).sum(
                 axis=1, keepdims=True)
             overhead = (cfg.scan_steps * (cfg.p + cfg.q)
@@ -246,18 +278,29 @@ def _simulate_batch_jax(slot, works, powers, scale, cfg: VectorConfig):
                         / cfg.packets_per_step * cfg.p)
             cross = overhead / jnp.maximum(t_bal, _TINY)
             fire = (t_bal > _TINY) & (imb > jnp.maximum(cross, cfg.floor))
-            queue = jnp.where(fire, fair_q, queue)
-            moved = moved + jnp.where(fire[:, 0], excess[:, 0], 0.0)
-            fires = fires + fire[:, 0].astype(jnp.float64)
+            if cfg.rebalance:
+                queue = jnp.where(fire, fair_q, queue)
+                moved = moved + jnp.where(fire[:, 0], excess[:, 0], 0.0)
+                fires = fires + fire[:, 0].astype(jnp.float64)
+            else:
+                fire = jnp.zeros_like(fire)
         # -- service (backlog sampled before draining, as in simulate_scalar)
         busy = queue.sum(axis=1)
-        queue = jnp.maximum(queue - pw * cfg.dt, 0.0)
-        return (queue, resp, fires, moved, seen), busy
+        queue_next = jnp.maximum(queue - pw * cfg.dt, 0.0)
+        if cfg.probe:
+            ys = (busy, queue, imb[:, 0], cross[:, 0], fire[:, 0])
+        else:
+            ys = busy
+        return (queue_next, resp, fires, moved, seen), ys
 
     carry0 = (jnp.zeros((B, n)), jnp.zeros((B, M)), jnp.zeros(B),
               jnp.zeros(B), jnp.zeros(B))
-    (_, resp, fires, moved, _), backlog = jax.lax.scan(
+    (_, resp, fires, moved, _), ys = jax.lax.scan(
         step, carry0, jnp.arange(T))
+    if cfg.probe:
+        backlog, probe_queue, probe_imb, probe_cross, probe_fire = ys
+    else:
+        backlog = ys
 
     count = cnt.sum(axis=1)
     mean = jnp.where(count > 0, resp.sum(axis=1) / jnp.maximum(count, 1.0),
@@ -273,7 +316,12 @@ def _simulate_batch_jax(slot, works, powers, scale, cfg: VectorConfig):
     busy = (backlog > _TINY).astype(jnp.int32)              # (T, B)
     last = (jnp.arange(T)[:, None] + 1) * busy
     makespan = last.max(axis=0).astype(jnp.float64) * cfg.dt
-    return mean, p99, makespan, fires, moved, count
+    out = (mean, p99, makespan, fires, moved, count)
+    if cfg.probe:
+        # scan stacks along the leading (time) axis; hand back batch-major
+        out = out + (probe_queue.transpose(1, 0, 2),
+                     probe_imb.T, probe_cross.T, probe_fire.T)
+    return out
 
 
 def simulate_batch(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
@@ -296,10 +344,14 @@ def simulate_batch(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
             jnp.asarray(works, dtype=jnp.float64),
             jnp.asarray(powers, dtype=jnp.float64),
             jnp.asarray(scale, dtype=jnp.float64), cfg)
-        mean, p99, makespan, fires, moved, count = map(np.asarray, out)
+        out = tuple(map(np.asarray, out))
+        mean, p99, makespan, fires, moved, count = out[:6]
+        probes = (dict(zip(("probe_queue", "probe_imbalance",
+                            "probe_crossover", "probe_fires"), out[6:]))
+                  if cfg.probe else {})
     return BatchMetrics(mean_response=mean, p99_response=p99,
                         makespan=makespan, trigger_fires=fires,
-                        moved_units=moved, completed=count)
+                        moved_units=moved, completed=count, **probes)
 
 
 def sweep_seeds(process: str, seeds, powers, cfg: VectorConfig, *,

@@ -11,6 +11,7 @@ exactly the paper's operating policy."""
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -60,6 +61,9 @@ class ReplicaScheduler:
     t_task: float = 1e-5
     packets_per_step: float = 4096.0   # KV tokens migrated per comm step
     trigger_floor: float = 0.1
+    # optional repro.obs.Tracer: records per-decision wall latency
+    # ("place" on submit, "trigger"/"rebalance" in maybe_rebalance)
+    tracer: object | None = None
 
     _requests: dict[int, Request] = field(default_factory=dict)
     _next_id: itertools.count = field(default_factory=itertools.count)
@@ -85,8 +89,11 @@ class ReplicaScheduler:
         the request lands in the power interval with the most headroom —
         computed from the load and power scans, no global reshuffle."""
         req = Request(next(self._next_id), prompt_len, max_new_tokens)
+        t0 = time.perf_counter()
         req.replica = positional_arrival(self.loads(), self.grid.powers,
                                          req.work)
+        if self.tracer is not None:
+            self.tracer.decision("place", time.perf_counter() - t0)
         self._requests[req.rid] = req
         return req
 
@@ -109,13 +116,19 @@ class ReplicaScheduler:
             return None
         loads = self.loads()
         mig_est = sum(r.kv_packets for r in reqs) * 0.3  # rough volume
+        t0 = time.perf_counter()
         dec = self.trigger.evaluate(loads, m_tasks=len(reqs),
                                     moved_packets_estimate=mig_est)
+        if self.tracer is not None:
+            self.tracer.decision("trigger", time.perf_counter() - t0)
         if not dec.trigger:
             return None
         works = np.array([r.work for r in reqs])
         node = np.array([r.replica for r in reqs])
+        t0 = time.perf_counter()
         res = psts_schedule(works, node, self.grid)
+        if self.tracer is not None:
+            self.tracer.decision("rebalance", time.perf_counter() - t0)
         plan = {}
         for r, dst in zip(reqs, res.dest):
             if dst != r.replica:

@@ -7,6 +7,7 @@ drain them — the elastic path."""
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -20,6 +21,8 @@ class StragglerMonitor:
     alpha: float = 0.3             # EWMA coefficient
     straggler_factor: float = 1.5  # step time above median * factor = straggler
     heartbeat_limit: int = 3       # missed updates before declared dead
+    # optional repro.obs.Tracer: records per-update wall latency
+    tracer: object | None = None
 
     _ewma: np.ndarray = field(init=False)
     _missed: np.ndarray = field(init=False)
@@ -31,6 +34,7 @@ class StragglerMonitor:
     def update(self, step_times: dict[int, float] | np.ndarray) -> None:
         """step_times: per-host seconds for the last step; hosts missing
         from a dict report count as missed heartbeats."""
+        t0 = time.perf_counter()
         if isinstance(step_times, dict):
             seen = np.zeros(self.n_hosts, bool)
             for h, t in step_times.items():
@@ -41,6 +45,8 @@ class StragglerMonitor:
             times = np.asarray(step_times, dtype=np.float64)
             for h in range(self.n_hosts):
                 self._observe(h, times[h])
+        if self.tracer is not None:
+            self.tracer.decision("estimate", time.perf_counter() - t0)
 
     def _observe(self, h: int, t: float) -> None:
         self._missed[h] = 0

@@ -56,12 +56,13 @@ from .schema import (
     InfeasibleTaskError,
     TraceSchema,
     dense_tiers,
+    hash_attr_value,
 )
 from .synth import trace_scale
 
 __all__ = [
     "OPS", "OP_NAMES", "Constraints", "Evictions", "InfeasibleTaskError",
-    "TraceSchema", "dense_tiers",
+    "TraceSchema", "dense_tiers", "hash_attr_value",
     "EVICTION_MODES", "GOOGLE_EVENT_TYPES", "load_google_task_events",
     "MACHINE_EVENT_TYPES", "MachineSchedule", "load_google_machine_events",
     "load_azure_packing",

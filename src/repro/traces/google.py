@@ -44,8 +44,11 @@ The mapping onto :class:`~repro.traces.schema.TraceSchema`:
   ``timestamp, job ID, task index, operator, attribute name, value``
   and Google's operator codes 0 ``==`` / 1 ``!=`` / 2 ``<`` / 3 ``>``.
   Non-numeric attribute values (opaque hashes in the public trace) are
-  dropped with a warning — map them to numbers in a preprocessing pass
-  if you need them.
+  kept for equality operators via :func:`repro.traces.hash_attr_value`
+  (a stable 48-bit code — declare node attributes through the same codec,
+  e.g. ``ClusterSpec(attrs={"platform": ("P1", "P2", ...)})``, and the
+  predicates match exactly); ordered comparisons on non-numeric values
+  are undefined and dropped with a warning.
 
 Rows may appear in any order (the public trace shards interleave); all
 joins are grouped/vectorized, so ingest is O(rows log rows) NumPy work.
@@ -61,7 +64,14 @@ import warnings
 import numpy as np
 
 from .io import iter_numeric_chunks, iter_text_chunks
-from .schema import OPS, Constraints, Evictions, TraceSchema, dense_tiers
+from .schema import (
+    OPS,
+    Constraints,
+    Evictions,
+    TraceSchema,
+    dense_tiers,
+    hash_attr_value,
+)
 
 __all__ = ["load_google_task_events", "GOOGLE_EVENT_TYPES",
            "EVICTION_MODES"]
@@ -254,8 +264,10 @@ def load_google_task_events(path, *, constraints_path=None,
 def _load_constraints(path, task_keys: np.ndarray,
                       chunk_bytes: int) -> Constraints:
     """task_constraints join: rows land on the trace position of their
-    (job, task index) key; rows for tasks outside the events file, or with
-    non-numeric attribute values, are dropped (counted in a warning)."""
+    (job, task index) key. Non-numeric attribute values are encoded with
+    ``hash_attr_value`` when the operator is ``==``/``!=``; rows for tasks
+    outside the events file, or with non-numeric values under an ordered
+    operator, are dropped (counted in a warning)."""
     if path is None:
         return Constraints()
     names: list[str] = []
@@ -274,10 +286,25 @@ def _load_constraints(path, task_keys: np.ndarray,
             _, job, tidx, op, attr, value = parts[:6]
             try:
                 op_code = _GOOGLE_OPS[int(float(op))]
+            except (KeyError, ValueError):
+                dropped += 1
+                continue
+            try:
                 val = float(value)
+            except ValueError:
+                # opaque categorical value (the public trace ships them as
+                # base64-ish hashes): meaningful under ==/!= only, where a
+                # stable hash code preserves the predicate exactly; ordered
+                # comparisons on them are undefined and stay dropped
+                if op_code in (OPS["=="], OPS["!="]):
+                    val = hash_attr_value(value.strip())
+                else:
+                    dropped += 1
+                    continue
+            try:
                 t_job.append(int(float(job)))
                 t_tidx.append(int(float(tidx)))
-            except (KeyError, ValueError):
+            except ValueError:
                 dropped += 1
                 continue
             attr = attr.strip()
@@ -290,7 +317,8 @@ def _load_constraints(path, task_keys: np.ndarray,
     if dropped:
         warnings.warn(f"task_constraints {path!r}: dropped {dropped} "
                       f"row(s) (malformed, unknown operator, or "
-                      f"non-numeric attribute value)", stacklevel=3)
+                      f"non-numeric attribute value under an ordered "
+                      f"operator)", stacklevel=3)
     if not t_job:
         return Constraints()
     keys = _pack_keys(np.asarray(t_job), np.asarray(t_tidx))

@@ -30,6 +30,7 @@ genuine completions.
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -44,6 +45,7 @@ __all__ = [
     "TraceSchema",
     "InfeasibleTaskError",
     "dense_tiers",
+    "hash_attr_value",
 ]
 
 # predicate operator codes (Google task_constraints uses 0-3; <=/>= are
@@ -64,6 +66,26 @@ _OP_FNS = {
 class InfeasibleTaskError(ValueError):
     """A task's constraints exclude every node in the cluster — surfaced
     as a diagnostic naming the task and its predicates, never a hang."""
+
+
+def hash_attr_value(value) -> float:
+    """Stable numeric code for an attribute value of any type.
+
+    Numeric values (and numeric-looking strings) pass through as plain
+    floats. Opaque strings — the hashed categorical values in the public
+    Google trace, e.g. machine platform ids — map to the first 48 bits of
+    their SHA-256, so the code is deterministic across runs/processes
+    (unlike ``hash()``) and exactly representable in the float64
+    ``Constraints.value`` column (48 < 53 mantissa bits: ``==``/``!=``
+    predicates compare exactly). Ordering of hashed codes is meaningless;
+    callers must restrict hashed values to equality operators.
+    """
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        pass
+    digest = hashlib.sha256(str(value).encode("utf-8")).digest()
+    return float(int.from_bytes(digest[:6], "big"))
 
 
 def _gather_rows(src_task: np.ndarray, tasks: np.ndarray

@@ -1,0 +1,429 @@
+"""Telemetry subsystem tests (PR 6): tracer, probes, trigger monitor,
+and the lab/CLI wiring.
+
+Four families:
+
+* **Chrome-trace schema** — the exported JSON is strict (no NaN), every
+  event carries the keys its phase requires, timestamps are microseconds
+  at 1 sim unit = 1 s, and ring mode keeps exactly the newest N events.
+* **Span nesting invariants** — per completed task: one ``task`` span
+  (arrival -> finish) containing its ``service`` span and any ``migrate``
+  flights; interrupted attempts close their service span at interrupt
+  time with ``interrupted: True``.
+* **Probe series** — fixed cadence survives fault churn, the incremental
+  O(nodes) snapshot accounting agrees with the O(tasks) recount at every
+  sample, and the batched scalar/vectorized imbalance helpers agree
+  level-for-level (including stranded-work ``inf``).
+* **Conformance** — telemetry changes no metric and no fingerprint, on
+  the events backend, the batched backend, and federated runs.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import lab
+from repro.federation import TopologySpec
+from repro.lab.cli import main as lab_cli
+from repro.obs import (
+    PID_SCHED,
+    CriticalPointMonitor,
+    NullTracer,
+    ProbeSeries,
+    Tracer,
+)
+from repro.obs.probe import _imbalance_by_level_batch, imbalance_by_level
+from repro.core.hypergrid import HyperGrid, factorize
+from repro.runtime import ClusterRuntime
+from repro.runtime.workload import make_workload
+
+
+def _scenario(obs, *, horizon=80.0, faults=True, seed=0):
+    return lab.Scenario(
+        name="obs-test",
+        cluster=lab.ClusterSpec(n_nodes=8, power_seed=3, bandwidth=64.0),
+        workload=lab.WorkloadSpec(process="poisson", horizon=horizon,
+                                  work_mean=5.0, params={"rate": 3.0}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        faults=lab.FaultSpec(failures=((20.0, 1), (21.0, 2)),
+                             joins=((45.0, 1), (46.0, 2)))
+        if faults else lab.FaultSpec(),
+        obs=obs, seed=seed)
+
+
+def _run_obs(**obs_kwargs):
+    r = lab.run(_scenario(lab.ObsSpec(**obs_kwargs)), backend="events")
+    return r, r.extras["obs"]
+
+
+# ---------------------------------------------------------------------------
+# tracer: chrome-trace schema
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema_is_valid_and_strict_json():
+    tr = Tracer()
+    tr.span("work", 1.0, 3.5, tid=7, args={"w": 2.0})
+    tr.instant("mark", 2.0, pid=PID_SCHED, cat="sched")
+    tr.counter("queued", 2.5, {"a": 1, "b": 2})
+    doc = tr.to_chrome_trace()
+    text = json.dumps(doc, allow_nan=False)  # strict: raises on NaN/inf
+    doc = json.loads(text)
+    events = doc["traceEvents"]
+    # process_name metadata for every declared lane
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {e["args"]["name"] for e in meta} == {"nodes", "tasks",
+                                                "scheduler"}
+    for e in events:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] != "M":
+            assert isinstance(e["ts"], float) and {"cat", "args"} <= set(e)
+    x = next(e for e in events if e["ph"] == "X")
+    # 1 sim unit = 1 s = 1e6 trace microseconds
+    assert x["ts"] == pytest.approx(1.0e6)
+    assert x["dur"] == pytest.approx(2.5e6)
+    assert x["args"] == {"w": 2.0}
+    i = next(e for e in events if e["ph"] == "i")
+    assert i["s"] == "t" and i["pid"] == PID_SCHED
+    c = next(e for e in events if e["ph"] == "C")
+    assert c["args"] == {"a": 1, "b": 2}
+    assert doc["otherData"]["n_events"] == 3
+
+
+def test_tracer_negative_duration_clamps_to_zero():
+    tr = Tracer()
+    tr.span("backwards", 2.0, 1.0)
+    x = next(e for e in tr.to_chrome_trace()["traceEvents"]
+             if e["ph"] == "X")
+    assert x["dur"] == 0.0
+
+
+def test_begin_end_merges_args_and_reports_unmatched():
+    tr = Tracer()
+    tr.begin(("migrate", 4), 1.0, args={"src": 0})
+    assert tr.end(("migrate", 4), "migrate", 2.0, tid=4,
+                  args={"dst": 3})
+    assert not tr.end(("migrate", 99), "migrate", 2.0)  # no begin
+    x = next(e for e in tr.to_chrome_trace()["traceEvents"]
+             if e["ph"] == "X")
+    assert x["args"] == {"src": 0, "dst": 3}
+    assert x["ts"] == pytest.approx(1.0e6)
+
+
+def test_ring_keeps_newest_events_and_counts_drops():
+    tr = Tracer(ring=4)
+    for i in range(10):
+        tr.instant(f"e{i}", float(i))
+    assert tr.n_events == 4
+    assert tr.n_dropped == 6
+    names = [e["name"] for e in tr.to_chrome_trace()["traceEvents"]
+             if e["ph"] == "i"]
+    assert names == ["e6", "e7", "e8", "e9"]
+    # a span opened before the window still closes correctly
+    tr2 = Tracer(ring=2)
+    tr2.begin(("k",), 0.0)
+    for i in range(5):
+        tr2.instant(f"x{i}", float(i))
+    assert tr2.end(("k",), "long", 9.0)
+    assert tr2.n_events == 2
+    with pytest.raises(ValueError):
+        Tracer(ring=0)
+
+
+def test_decision_stats_in_microseconds():
+    tr = Tracer()
+    for lat in (1e-6, 2e-6, 3e-6):
+        tr.decision("place", lat)
+    s = tr.decision_stats()["place"]
+    assert s["n"] == 3
+    assert s["mean_us"] == pytest.approx(2.0)
+    assert s["max_us"] == pytest.approx(3.0)
+    # decisions are stats-only: no trace events recorded
+    assert tr.n_events == 0
+
+
+def test_null_tracer_swallows_everything():
+    nt = NullTracer()
+    nt.span("a", 0.0, 1.0)
+    nt.instant("b", 0.0)
+    nt.counter("c", 0.0, {})
+    nt.decision("d", 1e-6)
+    assert nt.end(("k",), "a", 1.0) is False
+    assert nt.n_events == 0 and not nt.enabled
+    assert nt.to_chrome_trace()["traceEvents"] == []
+    assert nt.decision_stats() == {}
+
+
+# ---------------------------------------------------------------------------
+# span nesting invariants (events backend)
+# ---------------------------------------------------------------------------
+
+def test_task_span_contains_service_and_migrate_spans():
+    r, obs = _run_obs(trace=True)
+    events = obs["chrome_trace"]["traceEvents"]
+    tasks = {e["tid"]: e for e in events if e["name"] == "task"}
+    assert len(tasks) == r.metrics["completed"]
+    for e in tasks.values():
+        assert {"work", "tier", "node", "migrations", "evictions",
+                "restarts"} <= set(e["args"])
+    for e in events:
+        if e["ph"] != "X" or e["name"] == "task":
+            continue
+        # every lifecycle sub-span nests inside its task's span
+        parent = tasks[e["tid"]]
+        assert parent["ts"] <= e["ts"] + 1e-3
+        assert (e["ts"] + e["dur"]
+                <= parent["ts"] + parent["dur"] + 1e-3), e
+        if e["name"] == "migrate":
+            assert e["args"]["src"] != e["args"]["dst"]
+            assert e["dur"] > 0  # the WAN/LAN flight takes bandwidth time
+    services = [e for e in events if e["name"] == "service"]
+    completed = [e for e in services if not e["args"]]
+    assert len(completed) == r.metrics["completed"]
+    interrupted = [e for e in services if e["args"]]
+    assert all(e["args"]["interrupted"] for e in interrupted)
+    # node fail/join instants land on the nodes lane
+    assert sum(e["name"] == "fail" for e in events) == r.metrics["failures"]
+    assert sum(e["name"] == "join" for e in events) == r.metrics["joins"]
+
+
+def test_engine_decision_latency_recorded_sub_ms():
+    _, obs = _run_obs(trace=True)
+    stats = obs["decision_stats"]
+    for kind in ("place", "trigger"):
+        assert stats[kind]["n"] > 0
+        assert stats[kind]["mean_us"] < 1000.0
+    # placement latency is sampled 1-in-8, not a census
+    assert stats["place"]["n"] < obs["trace_events"]
+
+
+def test_ring_mode_through_the_lab():
+    _, obs = _run_obs(trace=True, ring=32)
+    assert obs["trace_events"] == 32
+    assert obs["trace_dropped"] > 0
+    assert len([e for e in obs["chrome_trace"]["traceEvents"]
+                if e["ph"] != "M"]) == 32
+
+
+# ---------------------------------------------------------------------------
+# probes
+# ---------------------------------------------------------------------------
+
+def test_probe_cadence_validation():
+    for bad in (0.0, -1.0, math.nan, math.inf):
+        with pytest.raises(ValueError):
+            ProbeSeries(bad)
+    with pytest.raises(ValueError):
+        lab.ObsSpec(probe_every=0.0)
+
+
+def test_probe_cadence_survives_fault_churn():
+    _, obs = _run_obs(trace=False, probe_every=2.5)
+    p = obs["probes"]
+    t = p["t"]
+    assert len(t) > 20
+    diffs = np.diff(t)
+    assert np.allclose(diffs, 2.5), diffs[:10]  # fixed cadence throughout
+    # samples keep coming after the failures at t=20/21 and joins at 45/46
+    assert t[-1] > 46.0
+    n, width = len(t), len(p["node_load"][0])
+    assert width == 8
+    for key in ("node_load", "occupancy", "queue_depth"):
+        assert len(p[key]) == n and all(len(row) == width for row in p[key])
+    assert len(p["imbalance_by_level"]) == n
+    # 8 nodes embed into a 3-d grid (d* = ceil(log2 8)); levels stay
+    # constant across churn because failed nodes turn virtual in place
+    assert {len(row) for row in p["imbalance_by_level"]} == {3}
+    for series in p["tier_work"].values():
+        assert len(series) == n
+    assert len(p["in_flight"]) == n and len(p["queued_tasks"]) == n
+
+
+def test_incremental_snapshot_matches_task_recount_under_churn():
+    """The O(nodes) probe accounting (maintained at every queue mutation)
+    must agree with an O(tasks) recount at every sample instant, through
+    failures, joins, migrations and priority tiers."""
+    rng = np.random.default_rng(0)
+    powers = rng.integers(1, 5, size=6).astype(float)
+    probe = ProbeSeries(1.0)
+    rt = ClusterRuntime(powers, "psts", trigger_period=1.0,
+                        bandwidth=32.0, probe=probe)
+    wl = make_workload("poisson", horizon=40.0, work_mean=4.0, seed=1,
+                       rate=6.0)
+    rt.schedule_workload(wl, failures=[(8.0, 0), (9.0, 3)],
+                         joins=[(22.0, 0), (23.0, 3)])
+    for t_cut in (5.0, 10.0, 20.0, 30.0, 200.0):
+        rt.step_until(t_cut)
+        snap = rt.probe_snapshot(t_cut)
+        # recount from live task state, the fallback path's definition
+        expect = rt.loads(t_cut)
+        assert np.allclose(snap["node_load"], expect, atol=1e-6), t_cut
+        tiers = {}
+        for q in rt._queues:
+            for task in q:
+                tiers[task.priority] = tiers.get(task.priority, 0.0) \
+                    + task.work
+        got = snap["tier_work"]
+        assert set(got) <= set(tiers) | {0}
+        for tier, w in tiers.items():
+            if w > 1e-9:
+                assert got.get(tier, 0.0) == pytest.approx(w), t_cut
+
+
+def test_scalar_and_batched_imbalance_agree_with_stranded_inf():
+    rng = np.random.default_rng(2)
+    # a 2x2x2 grid with one dead (virtual) slot; strand work on it in
+    # some samples so both helpers must agree on the inf branch too
+    powers = rng.integers(1, 5, size=8).astype(float)
+    powers[5] = 0.0
+    grid = HyperGrid(factorize(8, 3), powers)
+    loads = rng.uniform(0.0, 10.0, size=(12, 8))
+    loads[::3, 5] = 0.0  # every third sample has nothing stranded
+    batch = _imbalance_by_level_batch(loads, grid)
+    for i in range(loads.shape[0]):
+        scalar = imbalance_by_level(loads[i], grid)
+        for a, b in zip(batch[i], scalar):
+            if math.isinf(b):
+                assert math.isinf(a), (i, batch[i], scalar)
+            else:
+                assert a == pytest.approx(b), (i, batch[i], scalar)
+
+
+def test_probe_to_dict_is_json_safe_with_stranded_work():
+    # load recorded on a zero-power (virtual) slot -> infinite imbalance,
+    # which the JSON export must turn into None (strict JSON has no inf)
+    grid = HyperGrid(factorize(4, 2), [2.0, 1.0, 0.0, 1.0])
+    probe = ProbeSeries(1.0)
+    probe.record(0.0, grid=grid, node_load=[1.0, 1.0, 0.5, 1.0],
+                 queue_depth=[1, 1, 1, 1], tier_work={0: 3.5},
+                 in_flight=0, queued_tasks=4)
+    assert math.isinf(probe.imbalance[0][-1])
+    d = probe.to_dict()
+    json.dumps(d, allow_nan=False)  # inf imbalance exported as None
+    assert any(None in row for row in d["imbalance_by_level"])
+
+
+# ---------------------------------------------------------------------------
+# critical-point monitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_alignment_against_the_paper_bound():
+    r, obs = _run_obs(trace=True, probe_every=5.0)
+    trig = obs["trigger"]
+    assert trig["summary"]["aligned"]
+    assert trig["summary"]["n_evals"] == r.metrics["trigger_evals"]
+    assert trig["summary"]["n_fires"] == r.metrics["trigger_fires"]
+    for e in trig["events"]:
+        if e["imbalance"] is None:  # stranded work: infinite imbalance
+            assert e["fired"]
+            continue
+        assert e["fired"] == (e["imbalance"] > e["bound"])
+        assert e["bound"] == pytest.approx(max(e["crossover"], e["floor"]))
+
+
+def test_monitor_misaligned_event_detected():
+    mon = CriticalPointMonitor()
+
+    class _D:
+        trigger, imbalance, crossover, overhead, gain = (
+            True, 0.1, 0.5, 1.0, 0.0)
+
+    mon.record(1.0, _D())  # fired below the bound: violates the criterion
+    assert not mon.aligned()
+
+
+# ---------------------------------------------------------------------------
+# conformance: telemetry changes nothing
+# ---------------------------------------------------------------------------
+
+def test_obs_changes_no_metric_and_no_fingerprint_events():
+    base = _scenario(None)
+    instrumented = _scenario(lab.ObsSpec(trace=True, probe_every=2.0))
+    assert base.fingerprint() == instrumented.fingerprint()
+    r0 = lab.run(base, backend="events")
+    r1 = lab.run(instrumented, backend="events")
+    assert r0.metrics == r1.metrics
+    assert "obs" not in r0.extras and "obs" in r1.extras
+
+
+def test_obs_changes_no_metric_batched():
+    sc = lab.Scenario(
+        name="obs-batched",
+        cluster=lab.ClusterSpec(n_nodes=4, power_seed=1),
+        workload=lab.WorkloadSpec(process="poisson", horizon=40.0,
+                                  work_mean=4.0, params={"rate": 2.0}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0))
+    on = sc.replace(obs=lab.ObsSpec(trace=False, probe_every=1.0))
+    r0 = lab.run(sc, backend="batched", dt=1.0)
+    r1 = lab.run(on, backend="batched", dt=1.0)
+    assert r0.metrics == r1.metrics
+    p = r1.extras["obs"]["probes"]
+    n = len(p["t"])
+    assert n > 0 and len(p["node_load"]) == n
+    assert len(r1.extras["obs"]["trigger"]["events"]) == n
+    json.dumps(r1.extras["obs"], allow_nan=False)
+
+
+def test_obs_spec_round_trips_and_stays_out_of_fingerprint():
+    sc = _scenario(lab.ObsSpec(trace=True, probe_every=3.0, ring=128))
+    back = lab.Scenario.from_json(sc.to_json())
+    assert back == sc
+    assert back.obs == lab.ObsSpec(trace=True, probe_every=3.0, ring=128)
+    assert back.fingerprint() == _scenario(None).fingerprint()
+
+
+def test_federated_members_export_obs_and_wan_stream():
+    members = []
+    for i, rate in enumerate((6.0, 1.0)):
+        members.append(lab.Scenario(
+            name=f"dc{i}",
+            cluster=lab.ClusterSpec(n_nodes=4, power_seed=i,
+                                    bandwidth=64.0),
+            workload=lab.WorkloadSpec(process="poisson", horizon=30.0,
+                                      work_mean=5.0,
+                                      params={"rate": rate}),
+            policy=lab.PolicySpec("psts", trigger_period=1.0,
+                                  params={"floor": 0.05}),
+            obs=lab.ObsSpec(trace=True, probe_every=4.0) if i == 0
+            else None,
+            seed=i))
+    fed = lab.Federation(
+        name="obs-fed", members=tuple(members),
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=1.0),
+        exchange_period=4.0)
+    bare = fed.updated({"members.0.obs": None})
+    assert fed.fingerprint() == bare.fingerprint()
+    r = lab.run(fed, backend="federated")
+    obs = r.extras["obs"]
+    assert obs["members"][1] is None  # uninstrumented member stays dark
+    m0 = obs["members"][0]
+    assert m0["trace_events"] > 0 and len(m0["probes"]["t"]) > 0
+    assert len(obs["wan_stream"]) > 0
+    for s in obs["wan_stream"]:
+        assert {"t", "member_load", "wan_inflight_work",
+                "migrations"} <= set(s)
+        assert len(s["member_load"]) == 2
+    json.dumps(obs, allow_nan=False)
+    assert r.metrics == lab.run(bare, backend="federated").metrics
+
+
+def test_cli_trace_out_and_probe_every(tmp_path):
+    sc = _scenario(None, horizon=30.0, faults=False)
+    spec = tmp_path / "scenario.json"
+    spec.write_text(sc.to_json())
+    trace_out = tmp_path / "trace.json"
+    out = tmp_path / "result.json"
+    assert lab_cli(["run", str(spec), "--trace-out", str(trace_out),
+                    "--probe-every", "5", "--out", str(out)]) == 0
+    doc = json.loads(trace_out.read_text())
+    assert doc["traceEvents"]
+    assert doc["otherData"]["n_events"] > 0
+    result = json.loads(out.read_text())[0]
+    obs = result["extras"]["obs"]
+    assert "chrome_trace" not in obs  # full event list only via --trace-out
+    assert len(obs["probes"]["t"]) > 0
+    assert result["fingerprint"] == sc.fingerprint()

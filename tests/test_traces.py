@@ -950,3 +950,74 @@ def test_load_trace_dispatch_and_unknown_format():
     assert tr.m == 8
     with pytest.raises(ValueError, match="unknown trace format"):
         load_trace(str(DATA / "tiny_trace.csv"), format="nope")
+
+
+# ---------------------------------------------------------------------------
+# attribute-value hashing (stable codes for non-numeric constraint values)
+# ---------------------------------------------------------------------------
+
+def test_hash_attr_value_numeric_passthrough():
+    from repro.traces import hash_attr_value
+
+    assert hash_attr_value(3) == 3.0
+    assert hash_attr_value(2.5) == 2.5
+    assert hash_attr_value("7") == 7.0      # numeric-looking strings too
+    assert hash_attr_value("1e3") == 1000.0
+    assert hash_attr_value(True) == 1.0
+
+
+def test_hash_attr_value_opaque_strings_are_stable_48_bit_codes():
+    from repro.traces import hash_attr_value
+
+    code = hash_attr_value("platform-aB3/xyz")
+    # deterministic across calls (unlike hash(), which is salted per
+    # process) and an exact float64 integer under 2**48
+    assert code == hash_attr_value("platform-aB3/xyz")
+    assert code == float(int(code))
+    assert 0 <= code < 2.0 ** 48
+    assert hash_attr_value("platform-aB3/xyz") != hash_attr_value(
+        "platform-aB3/xyzz")
+    # pinned value: the codec is part of the on-disk spec format, so a
+    # silent change would break recorded fingerprints and spec files
+    assert hash_attr_value("machine_class") == 66852076972125.0
+
+
+def test_hash_attr_value_round_trips_through_cluster_spec():
+    from repro.traces import hash_attr_value
+
+    spec = lab.ClusterSpec(
+        powers=(1.0, 2.0),
+        attrs={"platform": ("alpha", "beta"), "cpus": (2, 4)})
+    resolved = spec.resolve_attrs()
+    assert resolved["platform"] == (hash_attr_value("alpha"),
+                                    hash_attr_value("beta"))
+    assert resolved["cpus"] == (2.0, 4.0)
+    # a string-valued constraint compares exactly against the hashed
+    # node attribute: == selects exactly the matching node
+    tr = TraceSchema(
+        t_arrive=np.array([0.0]), works=np.array([2.0]),
+        packets=np.array([1.0]),
+        constraints=Constraints(
+            attr_names=("platform",),
+            task=np.array([0]),
+            attr=np.array([0]),
+            op=np.array([OPS["=="]]),
+            value=np.array([hash_attr_value("beta")])))
+    rt = ClusterRuntime(spec.resolve_powers(), "jsq",
+                        node_attrs=resolved)
+    rt.run(tr)
+    (task,) = rt.tasks.values()
+    assert task.node == 1  # only "beta" is feasible
+
+
+def test_hash_attr_value_round_trips_through_spec_json():
+    spec = lab.ClusterSpec(powers=(1.0,), attrs={"platform": ("alpha",)})
+    sc = lab.Scenario(
+        name="hashed-attrs",
+        cluster=spec,
+        workload=lab.WorkloadSpec(process="poisson", horizon=5.0,
+                                  params={"rate": 1.0}),
+        policy=lab.PolicySpec("jsq"))
+    back = lab.Scenario.from_json(sc.to_json())
+    assert back.cluster.attrs == spec.attrs
+    assert back.fingerprint() == sc.fingerprint()
