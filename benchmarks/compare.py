@@ -37,6 +37,8 @@ LOWER_IS_BETTER = (
     "tier0_p99",
     "worst_tier_wait",
     "wasted_work",     # service burned by eviction/failure churn (PR 5)
+    "cp_stretch",      # makespan over the DAG critical-path bound (PR 7)
+    "dag_bytes_moved",
     "us_per_call",  # only with --include-timing
 )
 HIGHER_IS_BETTER = (
@@ -44,6 +46,9 @@ HIGHER_IS_BETTER = (
     "isolated_over_full",
     "tier0_improvement",  # constrained PSTS vs blind dispatch margin
     "waste_improvement",  # PSTS vs arrival-only wasted work margin (PR 5)
+    "locality_hit_ratio",  # DAG children placed with their input (PR 7)
+    "cp_stretch_improvement",  # locality vs locality-blind margin (PR 7)
+    "tasks_per_second",
 )
 # absolute ceilings enforced on the fresh run alone, no baseline needed:
 # wall-clock ratios drift run-to-run (relative gating would be noise) but

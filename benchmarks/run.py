@@ -69,6 +69,11 @@ def _suites():
         suites.append(("obs", bench_obs.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_dag
+        suites.append(("dag", bench_dag.ALL))
+    except ImportError:
+        pass
     return suites
 
 

@@ -1,0 +1,76 @@
+"""DAG workload walkthrough: dependency-aware release, data-locality
+placement, and critical-path metrics.
+
+Builds a fan-in/fan-out pipeline DAG (the map/reduce shape: a stage head
+fans out to parallel workers which fan back into the next head), where
+each task ships ``out_size`` bytes of output to every child that runs on
+a different node over a slow interconnect. The event engine holds every
+task with unfinished parents in a release frontier — a child is never
+admitted to any queue before all parents complete, even across
+eviction/requeue churn — and charges ``out_size / link_bandwidth`` of
+transfer before a cross-node child's service can start.
+
+Compares the paper's locality-blind PSTS positional rule with the
+``"locality"`` policy (the same rule plus the transfer-cost term), then
+prints the critical-path scorecard: ``cp_lower_bound`` (arrival-aware
+DAG bound, policy-independent), ``cp_stretch`` (makespan over that
+bound — 1.0 is unbeatable), ``locality_hit_ratio`` and
+``dag_bytes_moved``.
+
+Run: PYTHONPATH=src python examples/dag_pipeline.py
+"""
+
+from repro import lab
+from repro.graphs import make_dag
+
+# two slow + two fast nodes behind a slow interconnect: shipping one
+# task's 24-unit output (3 time units) rivals running the task itself
+POWERS = (0.5, 0.5, 2.0, 2.0)
+LINK_BW = 8.0
+
+
+def scenario(policy: str) -> lab.Scenario:
+    return lab.Scenario(
+        name=f"dag-pipeline/{policy}",
+        cluster=lab.ClusterSpec(powers=POWERS, link_bandwidth=LINK_BW),
+        workload=lab.WorkloadSpec(process="poisson", horizon=40.0,
+                                  params={"rate": 2.0},
+                                  dag={"kind": "fanin_fanout", "fan": 4,
+                                       "out_size": 24.0}),
+        policy=lab.PolicySpec(policy, trigger_period=1.0),
+    )
+
+
+def main():
+    # the generator alone, outside the lab: inspect the DAG's shape
+    dag = make_dag({"kind": "fanin_fanout", "fan": 4, "out_size": 24.0},
+                   m=21, seed=0)
+    print("=== fanin_fanout(21) topology ===")
+    print(f"edges={dag.k}  depth={dag.depth()}  width={dag.width()}  "
+          f"critical_path={dag.critical_path():.0f} tasks")
+    print()
+
+    print("=== locality-blind PSTS vs locality-aware placement ===")
+    for policy in ("psts", "locality"):
+        r = lab.run(scenario(policy), backend="events")
+        census = r.extras["work_census"]
+        print(f"{policy:>9}  cp_stretch={r['cp_stretch']:6.3f}  "
+              f"hit_ratio={r['locality_hit_ratio']:.3f}  "
+              f"bytes_moved={r['dag_bytes_moved']:6.0f}  "
+              f"makespan={r['makespan']:7.2f}  "
+              f"conservation_gap={census['conservation_gap']:.3g}")
+    print()
+    print("cp_lower_bound is policy-independent "
+          f"({r['cp_lower_bound']:.2f} here): pricing the transfer into "
+          "placement is pure critical-path win.")
+
+    # the frontier in the probe stream: blocked-on-parents task counts
+    sc = scenario("locality").replace(obs=lab.ObsSpec(probe_every=5.0))
+    r = lab.run(sc, backend="events")
+    peak = max(r.extras["obs"]["probes"]["blocked_tasks"])
+    print(f"peak release-frontier size (probe stream): {peak:.0f} tasks "
+          "blocked on parents")
+
+
+if __name__ == "__main__":
+    main()

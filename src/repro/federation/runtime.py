@@ -65,6 +65,12 @@ def aggregate_metrics(members: list[Metrics]) -> Metrics:
         agg.admitted_work += m.admitted_work
         agg.completed_work += m.completed_work
         agg.wasted_work += m.wasted_work
+        agg.locality_hits += m.locality_hits
+        agg.locality_misses += m.locality_misses
+        agg.dag_bytes_moved += m.dag_bytes_moved
+        # each member's bound is a lower bound on its own finish; the
+        # federation cannot finish before its slowest member could
+        agg.cp_lower_bound = max(agg.cp_lower_bound, m.cp_lower_bound)
         agg.makespan = max(agg.makespan, m.makespan)
         agg.responses.extend(m.responses)
         agg.waits.extend(m.waits)
@@ -103,6 +109,7 @@ class FederatedRuntime:
                 d=member.cluster.d,
                 trigger_period=member.policy.trigger_period,
                 bandwidth=member.cluster.bandwidth,
+                link_bandwidth=member.cluster.link_bandwidth,
                 seed=member.engine_seed,
                 policy_kwargs=dict(member.policy.params),
                 node_attrs=member.cluster.resolve_attrs(),
@@ -164,6 +171,12 @@ class FederatedRuntime:
                     # member: the feasibility mask is resolved against the
                     # source cluster's attribute table and node count
                     continue
+                if task.parents or task.has_children:
+                    # DAG tasks are pinned too: parent completions release
+                    # children inside the owning member's frontier, and a
+                    # parent completing elsewhere would strand its blocked
+                    # children at home forever
+                    continue
                 dst = choose_destination(loads, powers, reachable, task.work)
                 if dst < 0:
                     break
@@ -196,6 +209,8 @@ class FederatedRuntime:
             "t": t,
             "member_load": [float(rt.loads(t).sum())
                             for rt in self.runtimes],
+            "member_blocked": [rt.census()["blocked"]
+                               for rt in self.runtimes],
             "wan_inflight_work": float(sum(
                 w for tl, _, w in self._wan_inflight if tl > t)),
             "migrations": self.stats.migrations,
@@ -230,8 +245,8 @@ class FederatedRuntime:
             c = rt.census()
             # in-flight tasks each hold a pending MIGRATION_ARRIVE event, so
             # pending_migrations alone covers local and WAN hand-offs
-            live += (c["queued"] + c["running"] + c["pending_arrivals"]
-                     + c["pending_migrations"])
+            live += (c["queued"] + c["running"] + c["blocked"]
+                     + c["pending_arrivals"] + c["pending_migrations"])
         if completed + live != self._scheduled:
             raise RuntimeError(
                 f"conservation violated {where}: scheduled="

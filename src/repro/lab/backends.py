@@ -145,6 +145,20 @@ def _fault_nodes_in_range(scenario: Scenario) -> str | None:
     return None
 
 
+def _dag_problem(scenario: Scenario) -> str | None:
+    """A DAG spec that cannot be realized (explicit edges sized for a
+    different task count, a bad generator param) must surface as an
+    eligibility reason, not a mid-run traceback. Trace workloads are
+    covered by :func:`_trace_problem`'s materialization."""
+    if scenario.workload.dag is None or scenario.workload.is_trace:
+        return None
+    try:
+        scenario.workload.materialize(scenario.seed)
+    except Exception as exc:  # noqa: BLE001 — surface any realization failure
+        return f"workload dag unrealizable: {exc}"
+    return None
+
+
 def _trace_problem(scenario: Scenario) -> str | None:
     """A missing/unparseable trace (or machine_events companion) must be an
     eligibility reason, not a mid-run traceback after the 'backends' report
@@ -211,8 +225,8 @@ class EventsBackend(Backend):
             make_policy(scenario.policy.name, **dict(scenario.policy.params))
         except (TypeError, ValueError) as exc:
             return str(exc)
-        return (_fault_nodes_in_range(scenario) or _trace_problem(scenario)
-                or _constraint_problem(scenario))
+        return (_fault_nodes_in_range(scenario) or _dag_problem(scenario)
+                or _trace_problem(scenario) or _constraint_problem(scenario))
 
     def run(self, scenario, **options):
         from ..obs import build_instruments, export_obs
@@ -230,6 +244,7 @@ class EventsBackend(Backend):
             d=scenario.cluster.d,
             trigger_period=scenario.policy.trigger_period,
             bandwidth=scenario.cluster.bandwidth,
+            link_bandwidth=scenario.cluster.link_bandwidth,
             seed=scenario.engine_seed,
             policy_kwargs=dict(scenario.policy.params),
             node_attrs=scenario.cluster.resolve_attrs(),
@@ -250,10 +265,13 @@ class EventsBackend(Backend):
             }
             extras["tier_counts"] = {
                 str(t): c for t, c in wl.tier_counts().items()}
-        if isinstance(wl, TraceSchema) and (wl.preempted
-                                            or wl.ends_evicted.any()):
-            # end-of-run work audit for churn replays: everything admitted
-            # is completed, and the waste the churn burned is on record
+        wl_dag = getattr(wl, "dag", None)
+        if (isinstance(wl, TraceSchema) and (wl.preempted
+                                             or wl.ends_evicted.any())) \
+                or (wl_dag is not None and not wl_dag.empty):
+            # end-of-run work audit for churn replays and DAG frontiers:
+            # everything admitted is completed, and the waste the churn
+            # burned is on record
             extras["work_census"] = {
                 k: v for k, v in rt.work_census().items()
                 if k in ("admitted", "completed", "wasted",
@@ -288,12 +306,20 @@ class BatchedBackend(Backend):
         bad = _unknown_policy_params(scenario)
         if bad is not None:
             return bad
+        if scenario.workload.dag is not None:
+            return ("workload declares a task-dependency DAG; the fluid "
+                    "model has no per-task identity to gate releases on "
+                    "parent completions — run on the events backend")
         bad = _fault_nodes_in_range(scenario) or _trace_problem(scenario)
         if bad is not None:
             return bad
         if scenario.workload.is_trace:
             from ..traces import TraceSchema
             wl = scenario.workload.materialize(scenario.seed)
+            if isinstance(wl, TraceSchema) and wl.has_dag:
+                return ("trace carries dependency edges; the fluid model "
+                        "has no per-task identity to gate releases on "
+                        "parent completions — run on the events backend")
             if isinstance(wl, TraceSchema) and wl.constrained:
                 return ("trace tasks carry placement constraints; the "
                         "fluid model has no per-task node identity to "
@@ -328,7 +354,8 @@ class BatchedBackend(Backend):
         return None
 
     # -- scenario -> tensors -----------------------------------------------
-    def compile(self, scenarios: list[Scenario], dt: float):
+    def compile(self, scenarios: list[Scenario], dt: float,
+                fifo_dispatch: bool = False):
         """Shared lowering for run/run_many: (slot, works, powers, cfg,
         power_scale). All scenarios must share cluster/policy/faults/
         workload shape (only seeds may differ)."""
@@ -371,6 +398,7 @@ class BatchedBackend(Backend):
             n_nodes=n, n_slots=n_slots, dt=float(dt),
             rebalance=(pol.name == "psts"),
             packets_per_unit=packets_per_unit,
+            fifo_dispatch=fifo_dispatch,
             # probes lower to scan carry-outs; lifecycle tracing has no
             # fluid analogue (no per-task identity) and is flagged ignored
             probe=(base.obs is not None
@@ -473,6 +501,7 @@ class BatchedBackend(Backend):
             fingerprint=scenario.fingerprint(), backend=self.name,
             backend_options={
                 "model": "fluid", "dt": cfg.dt, "n_slots": cfg.n_slots,
+                **({"fifo_dispatch": True} if cfg.fifo_dispatch else {}),
                 # spec fields the fluid model has no analogue for: the
                 # trigger is evaluated every slot, migration is an instant
                 # redistribution (cost via packets_per_step), the
@@ -487,14 +516,17 @@ class BatchedBackend(Backend):
             metrics=metrics, extras=extras or {},
             scenario_name=scenario.name)
 
-    def run(self, scenario, *, dt: float | None = None, **options):
+    def run(self, scenario, *, dt: float | None = None,
+            fifo_dispatch: bool = False, **options):
         if options:
-            raise TypeError(f"batched backend options: dt only; got "
-                            f"{sorted(options)}")
-        return self.run_many([scenario], dt=dt)[0]
+            raise TypeError(f"batched backend options: dt and "
+                            f"fifo_dispatch only; got {sorted(options)}")
+        return self.run_many([scenario], dt=dt,
+                             fifo_dispatch=fifo_dispatch)[0]
 
     def run_many(self, scenarios: list[Scenario],
-                 *, dt: float | None = None) -> list[RunResult]:
+                 *, dt: float | None = None,
+                 fifo_dispatch: bool = False) -> list[RunResult]:
         """The whole sweep as ONE ``simulate_batch`` call."""
         from ..runtime.vector_backend import simulate_batch
         if not scenarios:
@@ -505,7 +537,8 @@ class BatchedBackend(Backend):
         dt = self.default_dt if dt is None else float(dt)
         if dt <= 0:
             raise BackendError(f"batched backend: dt must be > 0, got {dt}")
-        slot, works, powers, cfg, scale = self.compile(scenarios, dt)
+        slot, works, powers, cfg, scale = self.compile(
+            scenarios, dt, fifo_dispatch=fifo_dispatch)
         bm = simulate_batch(slot, works, powers, cfg, power_scale=scale)
         # one resolution for the whole batch: compile() enforced that the
         # scenarios share one fault schedule (only seed/name differ)
@@ -561,6 +594,10 @@ class LegacyBackend(Backend):
         if scenario.workload.is_trace:
             return ("samples its own workload realization; trace replay "
                     "needs the events or batched backend")
+        if scenario.workload.dag is not None:
+            return ("workload declares a task-dependency DAG; the static "
+                    "snapshot has no timeline to gate releases on parent "
+                    "completions — run on the events backend")
         return _unknown_policy_params(scenario)
 
     def run(self, scenario, **options):

@@ -196,6 +196,17 @@ def _trace_cmd(args) -> int:
           + (f" over attrs {sorted(c.attr_names)}" if c.k else ""))
     print(f"evictions    {trace.evictions.k} requeue event(s), "
           f"{int(trace.ends_evicted.sum())} task(s) end evicted")
+    if args.deps:
+        dag = trace.dag
+        if dag.empty:
+            print("deps         none (no dependency edges in this trace)")
+        else:
+            print(f"deps         {dag.k} edge(s) over {dag.m} task(s)")
+            print(f"  depth          {dag.depth()} level(s)")
+            print(f"  width          {dag.width()} task(s)")
+            print(f"  critical path  {dag.critical_path():.0f} task(s) "
+                  f"(unit works); "
+                  f"{dag.critical_path(trace.works):.3f} work units")
     if args.machine_events:
         # same clock defaults as TraceRef.load_machine_events: google
         # stamps microseconds, other formats are in plain time units —
@@ -279,6 +290,11 @@ def main(argv: list[str] | None = None) -> int:
     p_tr.add_argument("--machine-events", default=None, metavar="FILE",
                       help="google machine_events companion: print its "
                       "capacity churn as a failure/join/resize schedule")
+    p_tr.add_argument("--deps", action="store_true",
+                      help="print DAG stats (edges, depth, width, "
+                      "critical-path length) when the trace carries "
+                      "dependency edges — a deps sidecar or google "
+                      "job_chains=true")
     p_tr.add_argument("--scale", type=float, default=None,
                       help="bootstrap an Nx-rate resample (trace_scale)")
     p_tr.add_argument("--seed", type=int, default=0,

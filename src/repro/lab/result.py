@@ -37,6 +37,12 @@ METRIC_SCHEMA = (
     "admitted_work",
     "completed_work",
     "wasted_work",
+    "locality_hits",
+    "locality_misses",
+    "locality_hit_ratio",
+    "dag_bytes_moved",
+    "cp_lower_bound",
+    "cp_stretch",
 )
 
 

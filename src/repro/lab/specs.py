@@ -139,6 +139,9 @@ class ClusterSpec(_SpecBase):
     power_seed: int = 0
     d: int | None = None            # hyper-grid dimension; None = optimal_dim
     bandwidth: float = 64.0         # packets per time unit while migrating
+    # intra-cluster data-fabric rate for DAG parent-output fetches
+    # (bytes per time unit); None = same as the migration bandwidth
+    link_bandwidth: float | None = None
     # node attribute table {name: (n,) values} — what trace placement
     # constraints ("machine_class >= 2") are evaluated against
     attrs: Mapping | None = None
@@ -306,6 +309,11 @@ class WorkloadSpec(_SpecBase):
     trace: TraceRef | None = None   # real-trace reference (repro.traces)
     m_tasks: int | None = None      # task-count override for the static
                                     # legacy backend (paper: 4000)
+    # task-dependency DAG: either a generator spec ({"kind": "chain" |
+    # "diamond" | "fanin_fanout" | "random", "out_size": ..., ...},
+    # realized against the materialized task count with the scenario seed)
+    # or explicit {"edges": [[child, parent], ...], "out_size": [...]}
+    dag: Mapping | None = None
 
     def __post_init__(self):
         if isinstance(self.trace, Mapping):
@@ -333,6 +341,19 @@ class WorkloadSpec(_SpecBase):
                     f"process {self.process!r} params {sorted(unknown)} "
                     f"unknown; accepted: {sorted(allowed)}")
         object.__setattr__(self, "params", _frozen_params(self.params))
+        if self.dag is not None:
+            if not isinstance(self.dag, Mapping):
+                raise ValueError(
+                    "dag must be a mapping: a generator spec "
+                    '({"kind": ...}) or explicit edges ({"edges": ...})')
+            d = dict(self.dag)
+            if "edges" not in d:
+                from ..graphs import DAG_KINDS
+                if d.get("kind") not in DAG_KINDS:
+                    raise ValueError(
+                        f"dag needs 'edges' or a 'kind' in "
+                        f"{sorted(DAG_KINDS)}; got {sorted(d) or '{}'}")
+            object.__setattr__(self, "dag", _frozen_params(d))
 
     @property
     def is_trace(self) -> bool:
@@ -381,11 +402,12 @@ class WorkloadSpec(_SpecBase):
         memoized on (spec, seed, file contents): eligibility checks and the
         run itself would otherwise each re-ingest a million-row file."""
         if self.trace is None and self.trace_path is None:
-            return make_workload(self.process, horizon=self.horizon,
-                                 work_dist=self.work_dist,
-                                 work_mean=self.work_mean,
-                                 packet_mean=self.packet_mean,
-                                 seed=seed, **self.params)
+            wl = make_workload(self.process, horizon=self.horizon,
+                               work_dist=self.work_dist,
+                               work_mean=self.work_mean,
+                               packet_mean=self.packet_mean,
+                               seed=seed, **self.params)
+            return self._attach_dag(wl, seed)
         key = (json.dumps(self.to_dict(), sort_keys=True), int(seed),
                self.content_digest())
         if key not in _TRACE_CACHE:
@@ -396,8 +418,27 @@ class WorkloadSpec(_SpecBase):
                                 self.trace_path)
             if len(_TRACE_CACHE) >= 8:
                 _TRACE_CACHE.clear()
-            _TRACE_CACHE[key] = wl
+            _TRACE_CACHE[key] = self._attach_dag(wl, seed)
         return _TRACE_CACHE[key]
+
+    def _attach_dag(self, wl: Workload, seed: int) -> Workload:
+        """Realize ``dag`` against the materialized task count (generator
+        kinds draw from the scenario seed, so a seed sweep over a random
+        DAG is a real ensemble) and attach it as a TraceSchema field."""
+        if self.dag is None:
+            return wl
+        from ..graphs import make_dag
+        from ..traces.schema import TraceSchema
+        existing = getattr(wl, "dag", None)
+        if existing is not None and not existing.empty:
+            raise ValueError(
+                "the trace already carries dependency edges; drop "
+                "WorkloadSpec(dag=...) or the sidecar's deps")
+        dag = make_dag(_thaw(self.dag), wl.m, seed)
+        if isinstance(wl, TraceSchema):
+            return dataclasses.replace(wl, dag=dag)
+        return TraceSchema(t_arrive=wl.t_arrive, works=wl.works,
+                           packets=wl.packets, dag=dag)
 
 
 @dataclass(frozen=True)

@@ -100,6 +100,9 @@ class ProbeSeries:
         self.tier_work: dict[int, list[float]] = {}
         self.in_flight: list[int] = []
         self.queued_tasks: list[int] = []
+        # DAG release-frontier size: arrived tasks still gated on parents
+        # (always 0 for independent-task workloads and the batched backend)
+        self.blocked_tasks: list[int] = []
         self._grids: list[HyperGrid] = []
         self._derived: tuple[int, list, list] | None = None  # cache
 
@@ -113,8 +116,10 @@ class ProbeSeries:
         self.record(t, grid=runtime.grid, **snap)
 
     def record(self, t: float, *, grid: HyperGrid, node_load, queue_depth,
-               tier_work: dict, in_flight: int, queued_tasks: int) -> None:
+               tier_work: dict, in_flight: int, queued_tasks: int,
+               blocked_tasks: int = 0) -> None:
         self.t.append(float(t))
+        self.blocked_tasks.append(int(blocked_tasks))
         # a list (the runtime fast path) is copied element-wise; arrays and
         # other sequences go through numpy. Either way the stored sample is
         # a fresh row of python floats.
@@ -188,4 +193,5 @@ class ProbeSeries:
             "imbalance_by_level": [_clean(row) for row in imb_rows],
             "in_flight": list(self.in_flight),
             "queued_tasks": list(self.queued_tasks),
+            "blocked_tasks": list(self.blocked_tasks),
         }

@@ -57,6 +57,16 @@ class Metrics:
     admitted_work: float = 0.0
     completed_work: float = 0.0
     wasted_work: float = 0.0
+    # DAG workloads (PR 7): locality hits/misses count service attempts of
+    # tasks with DAG inputs — a hit starts on the node holding the largest
+    # parent output; dag_bytes_moved totals remote parent-output bytes
+    # fetched; cp_lower_bound is the workload's arrival-aware critical-path
+    # bound (the earliest any schedule could finish — cp_stretch normalizes
+    # makespan against it, Dutot et al.)
+    locality_hits: int = 0
+    locality_misses: int = 0
+    dag_bytes_moved: float = 0.0
+    cp_lower_bound: float = 0.0
     makespan: float = 0.0
     responses: list[float] = field(default_factory=list)
     waits: list[float] = field(default_factory=list)
@@ -90,6 +100,21 @@ class Metrics:
     @property
     def mean_wait(self) -> float:
         return float(np.mean(self.waits)) if self.waits else float("nan")
+
+    @property
+    def locality_hit_ratio(self) -> float:
+        """Fraction of DAG-input service attempts that started on the node
+        already holding the largest parent output (NaN without DAG work)."""
+        n = self.locality_hits + self.locality_misses
+        return self.locality_hits / n if n else float("nan")
+
+    @property
+    def cp_stretch(self) -> float:
+        """Makespan normalized by the critical-path lower bound (>= 1 for a
+        complete run; NaN when the workload declared no DAG)."""
+        if self.cp_lower_bound > 0:
+            return self.makespan / self.cp_lower_bound
+        return float("nan")
 
     def wait_by_tier(self) -> dict[int, dict]:
         """Per-priority-tier wait statistics (mean / P99 / count), the
@@ -128,4 +153,16 @@ class Metrics:
             "admitted_work": self.admitted_work,
             "completed_work": self.completed_work,
             "wasted_work": self.wasted_work,
+            "locality_hits": self.locality_hits,
+            "locality_misses": self.locality_misses,
+            # undefined ratios export as None, not NaN: NaN breaks dict
+            # equality (the obs-changes-no-metric invariant) and is not
+            # valid JSON anyway
+            "locality_hit_ratio": (
+                self.locality_hit_ratio
+                if self.locality_hits + self.locality_misses else None),
+            "dag_bytes_moved": self.dag_bytes_moved,
+            "cp_lower_bound": self.cp_lower_bound,
+            "cp_stretch": (self.cp_stretch
+                           if self.cp_lower_bound > 0 else None),
         }

@@ -44,6 +44,7 @@ __all__ = [
     "WeightedJsqPolicy",
     "ArrivalOnlyPolicy",
     "PstsPolicy",
+    "LocalityPolicy",
 ]
 
 
@@ -206,3 +207,41 @@ class PstsPolicy(ArrivalOnlyPolicy):
             packets_per_step=self.packets_per_step, floor=self.floor)
         return trigger.evaluate(view.loads, m_tasks=max(m_queued, 1),
                                 moved_packets_estimate=packets_estimate)
+
+
+@register("locality")
+@dataclass
+class LocalityPolicy(PstsPolicy):
+    """Data-locality-aware placement for DAG workloads (cf. Dask's
+    worker-objective heuristic): a task with parent outputs lands where
+    ``(load + work) / power + transfer`` is smallest — the estimated finish
+    accounting for both queueing *and* the input fetch the engine will
+    charge. Tasks without DAG inputs fall back to the positional rule, and
+    the trigger-gated PSTS rebalance of queued (released) work is
+    inherited unchanged, so on a bag of independent tasks this *is* PSTS.
+
+    ``coalloc=True`` co-allocates sibling groups (Moise et al.): candidates
+    are restricted to the nodes with the *minimal* transfer cost — children
+    of one parent pack onto the node holding its output until queueing
+    there is hopeless only if another node ties on transfer.
+    """
+
+    coalloc: bool = False
+
+    def on_arrival(self, work, packets, view):
+        if view.xfer is None:
+            return super().on_arrival(work, packets, view)
+        allowed = _allowed(view)
+        if not allowed.any():
+            raise ValueError("no active nodes to place on")
+        powers = np.where(allowed, view.grid.powers, 0.0)
+        xfer = np.where(allowed, view.xfer, np.inf)
+        if self.coalloc:
+            cand = allowed & (xfer <= xfer.min())
+            powers = np.where(cand, powers, 0.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            eta = np.where(powers > 0,
+                           (view.loads + work) / np.maximum(powers, 1e-12)
+                           + xfer,
+                           np.inf)
+        return int(np.argmin(eta))

@@ -79,6 +79,16 @@ class Task:
     # constraint feasibility over grid slots (None = feasible everywhere);
     # set once at admission from the trace's constraints x cluster attrs
     feasible: np.ndarray | None = None
+    # DAG wiring (PR 7): parent task ids this task must wait for, the count
+    # still unfinished (authoritative once the task has arrived), whether
+    # any task depends on this one (pins it against WAN hand-offs), the
+    # bytes this task materializes on its node, and where it materialized
+    # them (-1 until completion)
+    parents: tuple[int, ...] = ()
+    parents_left: int = 0
+    has_children: bool = False
+    out_size: float = 0.0
+    output_node: int = -1
     # (time, node) history of every placement decision, for invariant checks
     placements: list[tuple[float, int]] = field(default_factory=list)
 
@@ -88,7 +98,9 @@ class Task:
             return "done"
         if self.t_start is not None:
             return "running"
-        return "queued" if self.node >= 0 else "in_flight"
+        if self.node >= 0:
+            return "queued"
+        return "blocked" if self.parents_left > 0 else "in_flight"
 
 
 @dataclass(frozen=True)
@@ -103,6 +115,11 @@ class ClusterView:
     # feasible nodes for the task under decision (None = all); constraint-
     # blind runs never populate this, so policies stay mask-oblivious there
     feasible: np.ndarray | None = None
+    # per-node transfer time the task under decision would pay fetching its
+    # parents' outputs (None = no DAG inputs); locality-aware policies fold
+    # it into their score, others ignore it — the engine charges it either
+    # way, so ignoring it is a policy choice, not an accounting leak
+    xfer: np.ndarray | None = None
 
 
 class ClusterRuntime:
@@ -110,7 +127,8 @@ class ClusterRuntime:
 
     def __init__(self, powers, policy: str | Policy = "psts", *,
                  d: int | None = None, trigger_period: float = 2.0,
-                 bandwidth: float = 64.0, seed: int = 0,
+                 bandwidth: float = 64.0,
+                 link_bandwidth: float | None = None, seed: int = 0,
                  policy_kwargs: dict | None = None,
                  node_attrs: dict | None = None,
                  constraint_blind: bool = False,
@@ -122,12 +140,27 @@ class ClusterRuntime:
         self.policy = make_policy(policy, **(policy_kwargs or {}))
         self.trigger_period = float(trigger_period)
         self.bandwidth = float(bandwidth)
+        # intra-cluster data-fabric rate for DAG parent-output fetches;
+        # defaults to the migration bandwidth when not set apart
+        self.link_bandwidth = (float(link_bandwidth)
+                               if link_bandwidth is not None
+                               else float(bandwidth))
         self.rng = np.random.default_rng(seed)
         self.metrics = Metrics()
         self.tasks: dict[int, Task] = {}
         self._queues: list[list[Task]] = [[] for _ in range(self.grid.capacity)]
         self._running: list[Task | None] = [None] * self.grid.capacity
         self._in_flight: set[int] = set()
+        # release frontier (PR 7): arrived tasks whose parents have not all
+        # completed live here, outside every queue — rebalancing, stranding
+        # and federation withdrawal only ever see *released* tasks, so the
+        # positional rule stays defined on the released frontier alone.
+        # _pending_parents counts unfinished parents for tasks that have
+        # not arrived yet (popped onto Task.parents_left at arrival);
+        # _children maps a parent tid to the tids it gates.
+        self._blocked: dict[int, Task] = {}
+        self._pending_parents: dict[int, int] = {}
+        self._children: dict[int, list[int]] = {}
         self._eq = EventQueue()
         self._now = 0.0
         # node attribute table for placement constraints: {name: (n,) values}
@@ -193,7 +226,7 @@ class ClusterRuntime:
     def _outstanding(self) -> int:
         queued = sum(len(q) for q in self._queues)
         running = sum(r is not None for r in self._running)
-        return queued + running + len(self._in_flight)
+        return queued + running + len(self._in_flight) + len(self._blocked)
 
     def census(self) -> dict:
         """Where every live task is right now — the quantity conservation
@@ -202,6 +235,7 @@ class ClusterRuntime:
             "queued": sum(len(q) for q in self._queues),
             "running": sum(r is not None for r in self._running),
             "in_flight": len(self._in_flight),
+            "blocked": len(self._blocked),
             "pending_arrivals": self._eq.pending(EventKind.ARRIVAL),
             "pending_migrations": self._eq.pending(
                 EventKind.MIGRATION_ARRIVE),
@@ -228,7 +262,9 @@ class ClusterRuntime:
                 running_left += r.work - p
         migrating = sum(self.tasks[tid].work for tid in self._in_flight
                         if tid in self.tasks)
-        in_flight = queued + running_left + running_progress + migrating
+        blocked = sum(task.work for task in self._blocked.values())
+        in_flight = (queued + running_left + running_progress + migrating
+                     + blocked)
         m = self.metrics
         return {
             "admitted": m.admitted_work,
@@ -238,6 +274,7 @@ class ClusterRuntime:
             "running_left": running_left,
             "running_progress": running_progress,
             "migrating": migrating,
+            "blocked": blocked,
             "in_flight": in_flight,
             "conservation_gap": abs(
                 m.admitted_work - m.completed_work - in_flight),
@@ -251,6 +288,40 @@ class ClusterRuntime:
             EventKind.COMPLETION))
 
     # -- mechanics ----------------------------------------------------------
+    def _admit(self, task: Task, t: float) -> None:
+        """Admission gate of the release frontier: a task with unfinished
+        parents holds in ``_blocked`` (on no queue — invisible to
+        rebalancing, stranding and federation withdrawal) until its last
+        parent's completion releases it. Requeue paths (eviction, failure,
+        parked-work release, migration landing) come through here too as a
+        defensive re-latch — completions are irrevocable under the event
+        tie order, so a released task can never re-block, but the gate
+        makes the invariant local instead of global."""
+        if task.parents_left > 0:
+            self._blocked[task.tid] = task
+            task.node = -1
+        else:
+            self._place(task, t)
+
+    def _xfer_times(self, task: Task) -> np.ndarray | None:
+        """Per-node time to fetch the task's parent outputs over the data
+        link (``bytes / link_bandwidth``; a parent's output is free on the
+        node that produced it). ``None`` when the task has nothing to
+        fetch — the common non-DAG case stays allocation-free."""
+        if not task.parents:
+            return None
+        xfer = None
+        for pid in task.parents:
+            p = self.tasks.get(pid)
+            if p is None or p.out_size <= 0.0:
+                continue
+            if xfer is None:
+                xfer = np.zeros(self.grid.capacity)
+            xfer += p.out_size / self.link_bandwidth
+            if 0 <= p.output_node < xfer.size:
+                xfer[p.output_node] -= p.out_size / self.link_bandwidth
+        return xfer
+
     def _place(self, task: Task, t: float) -> None:
         """Ask the policy for a node; fall back to the least-loaded
         *feasible* active node if it answers with a virtual/failed/
@@ -271,9 +342,16 @@ class ClusterRuntime:
         if self._tr is not None:
             self._dec_count += 1
         _t0 = time.perf_counter() if _timed else 0.0
+        view = self.view(t, feasible=view_mask)
+        if task.parents:
+            xfer = self._xfer_times(task)
+            if xfer is not None:
+                view = ClusterView(
+                    time=view.time, grid=view.grid, loads=view.loads,
+                    m_seen=view.m_seen, rng=view.rng,
+                    feasible=view.feasible, xfer=xfer)
         try:
-            node = self.policy.on_arrival(task.work, task.packets,
-                                          self.view(t, feasible=view_mask))
+            node = self.policy.on_arrival(task.work, task.packets, view)
         except ValueError:  # e.g. positional rule with zero active power
             node = -1
         if _timed:
@@ -331,12 +409,38 @@ class ClusterRuntime:
         task = q.pop(i)
         if self._track:
             self._unqueue(node, task)
-        task.t_start = t
+        # DAG input fetch: remote parent outputs stream in before service
+        # begins. The node is occupied for the whole fetch (t_attempt_start
+        # marks occupation; t_start marks the service clock, so _progress
+        # reads zero until the data has landed), and the locality metrics
+        # charge every attempt — a restart re-fetches, exactly as it
+        # re-runs (nonpreemptive schedulers checkpoint neither).
+        xfer = 0.0
+        if task.parents:
+            remote = 0.0
+            best_p, best_node = 0.0, -1
+            for pid in task.parents:
+                p = self.tasks.get(pid)
+                if p is None or p.out_size <= 0.0:
+                    continue
+                if p.out_size > best_p:
+                    best_p, best_node = p.out_size, p.output_node
+                if p.output_node != node:
+                    remote += p.out_size
+            if best_node >= 0:
+                if best_node == node:
+                    self.metrics.locality_hits += 1
+                else:
+                    self.metrics.locality_misses += 1
+            if remote > 0.0:
+                self.metrics.dag_bytes_moved += remote
+                xfer = remote / self.link_bandwidth
+        task.t_start = t + xfer
         task.t_attempt_start = t
         self._running[node] = task
         # no "start" instant: the start time is the "service" span's start
         service = (task.work - task.work_done) / self.grid.powers[node]
-        self._eq.push(t + service, EventKind.COMPLETION,
+        self._eq.push(t + xfer + service, EventKind.COMPLETION,
                       (task, node, task.token))
 
     def _interrupt(self, task: Task, node: int, t: float) -> None:
@@ -433,7 +537,11 @@ class ClusterRuntime:
         # overhead budget's hottest line
         self.metrics.observe_arrival(work=task.work)
         self.tasks[task.tid] = task
-        self._place(task, t)
+        # the pre-arrival dict is authoritative until now: parents that
+        # completed before this arrival already decremented it
+        task.parents_left = self._pending_parents.pop(task.tid,
+                                                      task.parents_left)
+        self._admit(task, t)
 
     def _on_completion(self, task: Task, node: int, token: int,
                        t: float) -> None:
@@ -471,7 +579,29 @@ class ClusterRuntime:
                                 "migrations": task.migrations,
                                 "evictions": task.evictions,
                                 "restarts": task.restarts})
+        if task.has_children:
+            task.output_node = node
+            self._release_children(task.tid, t)
         self._try_start(node, t)
+
+    def _release_children(self, tid: int, t: float) -> None:
+        """A parent completed: decrement each child's unfinished-parent
+        count (the pre-arrival dict or the arrived task, whichever is
+        authoritative) and place children whose last parent this was."""
+        for cid in self._children.get(tid, ()):
+            if cid in self._pending_parents:  # child not arrived yet
+                self._pending_parents[cid] -= 1
+                continue
+            child = self.tasks.get(cid)
+            if child is None or child.t_finish is not None:
+                continue
+            child.parents_left -= 1
+            if child.parents_left <= 0 and cid in self._blocked:
+                del self._blocked[cid]
+                if self._tr is not None and t > child.t_arrive:
+                    self._tr.span("blocked-on-parents", child.t_arrive, t,
+                                  tid=cid, cat="lifecycle")
+                self._place(child, t)
 
     def _on_eviction(self, tid: int, t: float) -> None:
         """Exogenous preemption replay: pull the task off its machine,
@@ -491,7 +621,7 @@ class ClusterRuntime:
             self._interrupt(task, node, t)
             task.evictions += 1
             self.metrics.evictions += 1
-            self._place(task, t)
+            self._admit(task, t)
             self._try_start(node, t)
         elif task.node >= 0:  # queued: requeued through the policy
             self._queues[task.node].remove(task)
@@ -500,7 +630,7 @@ class ClusterRuntime:
             task.node = -1
             task.evictions += 1
             self.metrics.evictions += 1
-            self._place(task, t)
+            self._admit(task, t)
         # else: mid-migration — it is on no machine; nothing to reclaim
 
     def _on_resize(self, node: int, fraction: float, t: float) -> None:
@@ -522,16 +652,19 @@ class ClusterRuntime:
             self._tr.instant("resize", t, pid=PID_NODES, tid=node,
                              cat="node", args={"fraction": float(fraction)})
         r = self._running[node]
-        if r is not None:  # bank progress at the old rate first
-            r.work_done = self._progress(r, node, t)
-            r.t_start = t
+        if r is not None:
+            if r.t_start <= t:  # bank progress at the old rate first
+                r.work_done = self._progress(r, node, t)
+                r.t_start = t
+            # else: still fetching DAG inputs — the transfer end time is
+            # set by the link, not the node's power, so t_start stands
             r.token += 1
         powers = self.grid.powers.copy()
         powers[node] = new_power
         self.grid = HyperGrid(self.grid.dims, powers, self.grid.active)
         if r is not None:
             service = (r.work - r.work_done) / self.grid.powers[node]
-            self._eq.push(t + service, EventKind.COMPLETION,
+            self._eq.push(max(r.t_start, t) + service, EventKind.COMPLETION,
                           (r, node, r.token))
 
     def _on_migration_arrive(self, task: Task, dst: int, t: float) -> None:
@@ -544,7 +677,7 @@ class ClusterRuntime:
         if dst < 0 or not self.grid.active[dst]:
             # dst < 0: an injected federation hand-off, placed by the local
             # policy on landing; otherwise the destination died in flight
-            self._place(task, t)
+            self._admit(task, t)
             return
         task.node = dst
         task.placements.append((t, dst))
@@ -559,7 +692,7 @@ class ClusterRuntime:
             self._tr.instant("fail", t, pid=PID_NODES, tid=node, cat="node")
         self.grid = self.grid.fail(node)
         for task in self._strand(node, t):
-            self._place(task, t)
+            self._admit(task, t)
 
     def _on_join(self, node: int, t: float) -> None:
         if self.grid.active[node] or node >= self._powers_full.size:
@@ -581,7 +714,7 @@ class ClusterRuntime:
                     if self._track:
                         self._unqueue(nd, task)
                     task.node = -1
-                    self._place(task, t)
+                    self._admit(task, t)
         self._try_start(node, t)
 
     def _on_trigger_eval(self, t: float) -> None:
@@ -676,6 +809,7 @@ class ClusterRuntime:
             "tier_work": tier_work,
             "in_flight": len(self._in_flight),
             "queued_tasks": sum(len(q) for q in self._queues),
+            "blocked_tasks": len(self._blocked),
         }
 
     # -- federation hand-off ------------------------------------------------
@@ -767,6 +901,29 @@ class ClusterRuntime:
             if getattr(workload, "ends_evicted", None) is not None
             else np.zeros(workload.m, dtype=bool), dtype=bool)
         masks = self._resolve_feasibility(workload)
+        # DAG wiring: per-task parent tuples (global ids via tid_base), the
+        # pre-arrival pending-parent counts, the parent -> children map the
+        # release frontier walks at completions, and the workload's
+        # critical-path lower bound (the cp_stretch denominator)
+        dag = getattr(workload, "dag", None)
+        if dag is not None and dag.empty:
+            dag = None
+        parents_of = has_child = None
+        if dag is not None:
+            parents_of = dag.parents_of()
+            has_child = np.zeros(dag.m, dtype=bool)
+            if dag.k:
+                has_child[dag.parent] = True
+            for c, p in zip(dag.child.tolist(), dag.parent.tolist()):
+                self._children.setdefault(tid_base + p, []).append(
+                    tid_base + c)
+            for i, ps in enumerate(parents_of):
+                if ps:
+                    self._pending_parents[tid_base + i] = len(ps)
+            self.metrics.cp_lower_bound = max(
+                self.metrics.cp_lower_bound,
+                dag.cp_lower_bound(workload.works, self._base_powers,
+                                   workload.t_arrive))
         # stable (t, tier) order: priority decides admission within a batch
         order = np.lexsort((priority, workload.t_arrive))
         for i in map(int, order):
@@ -778,7 +935,13 @@ class ClusterRuntime:
                                priority=int(priority[i]),
                                ends_evicted=bool(ends_evicted[i]),
                                feasible=None if masks is None
-                               else masks[i]))
+                               else masks[i],
+                               parents=() if parents_of is None else tuple(
+                                   tid_base + p for p in parents_of[i]),
+                               has_children=bool(has_child[i])
+                               if has_child is not None else False,
+                               out_size=float(dag.out_size[i])
+                               if dag is not None else 0.0))
         evictions = getattr(workload, "evictions", None)
         if evictions is not None and not evictions.empty:
             for j in range(evictions.k):

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from ..kernels.prefix_scan import prefix_scan_pallas
+from ..kernels.psts_dispatch import dispatch_work_prefix_pallas
 from .metrics import nearest_rank
 from .workload import batch_slots
 
@@ -61,6 +62,12 @@ class VectorConfig:
     t_task: float = 1e-4            # per-task placement cost
     packets_per_step: float = 64.0
     packets_per_unit: float = 2.0   # migration packets per work unit
+    # FIFO-refined dispatch responses: a task's response also counts the
+    # work of earlier same-slot arrivals routed to the same node (its own
+    # dispatch wave's backlog), computed by the fused Pallas dispatch
+    # kernel (``kernels.psts_dispatch``). Off by default — the plain fluid
+    # response ignores intra-slot ordering entirely
+    fifo_dispatch: bool = False
     # telemetry: emit per-slot probe series (queue snapshot, imbalance,
     # crossover, fire flag) as extra scan carry-outs. Static, so the
     # disabled variant compiles the probe outputs away entirely
@@ -153,8 +160,19 @@ def simulate_scalar(slot: np.ndarray, works: np.ndarray, powers: np.ndarray,
             frac = np.clip((S - base[t] + 0.5 * works) / tot[t],
                            0.0, 1.0 - _TINY)
             owner = np.searchsorted(lam, frac, side="right") - 1
+            backlog_ahead = 0.0
+            if cfg.fifo_dispatch:
+                # exclusive same-owner work prefix within the slot (the
+                # FIFO backlog this dispatch wave builds in front of each
+                # task) — reference semantics for the Pallas dispatch
+                # kernel the batched path uses
+                backlog_ahead = np.zeros(works.shape[0])
+                acc = np.zeros(n)
+                for i in np.flatnonzero(mask):
+                    backlog_ahead[i] = acc[owner[i]]
+                    acc[owner[i]] += works[i]
             resp = resp + np.where(mask,
-                                   (queue[owner] + works) /
+                                   (queue[owner] + backlog_ahead + works) /
                                    np.maximum(pw[owner], _TINY), 0.0)
             np.add.at(queue, owner[mask], works[mask])
             seen += cnt[t]
@@ -256,8 +274,16 @@ def _simulate_batch_jax(slot, works, powers, scale, cfg: VectorConfig):
         owner = jnp.clip(owner, 0, n - 1)
         q_own = jnp.take_along_axis(queue, owner, axis=1)
         pw_own = jnp.take_along_axis(pw, owner, axis=1)
+        backlog_ahead = 0.0
+        if cfg.fifo_dispatch:
+            # fused dispatch kernel: exclusive same-owner work prefix of
+            # this slot's dispatch wave, all B scenarios in one grid
+            backlog_ahead, _ = dispatch_work_prefix_pallas(
+                jnp.where(mask, owner, -1).astype(jnp.int32),
+                jnp.where(mask, works, 0.0), n_experts=n, interpret=True)
         resp = resp + jnp.where(
-            mask, (q_own + works) / jnp.maximum(pw_own, _TINY), 0.0)
+            mask, (q_own + backlog_ahead + works)
+            / jnp.maximum(pw_own, _TINY), 0.0)
         queue = queue.at[rows, owner].add(jnp.where(mask, works, 0.0))
         seen = seen + cnt[:, t]
         # -- crossover trigger (and/or the probe's trigger signal — same

@@ -47,6 +47,7 @@ from .machines import (
     MachineSchedule,
     load_google_machine_events,
 )
+from ..graphs import DagSpec
 from .normalized import load_normalized_csv, write_normalized_csv
 from .schema import (
     OP_NAMES,
@@ -61,7 +62,8 @@ from .schema import (
 from .synth import trace_scale
 
 __all__ = [
-    "OPS", "OP_NAMES", "Constraints", "Evictions", "InfeasibleTaskError",
+    "OPS", "OP_NAMES", "Constraints", "DagSpec", "Evictions",
+    "InfeasibleTaskError",
     "TraceSchema", "dense_tiers", "hash_attr_value",
     "EVICTION_MODES", "GOOGLE_EVENT_TYPES", "load_google_task_events",
     "MACHINE_EVENT_TYPES", "MachineSchedule", "load_google_machine_events",

@@ -15,7 +15,9 @@ preprocessed traces round-trip without the original files:
       {"attr_names": ["machine_class"],
        "rows": [[task_index, "machine_class", ">=", 2.0], ...],
        "evictions": [[task_index, time], ...],
-       "ends_evicted": [task_index, ...]}
+       "ends_evicted": [task_index, ...],
+       "deps": [[child_index, parent_index], ...],
+       "out_size": [[task_index, bytes], ...]}
 
   ``task_index`` refers to the row's position in *arrival order* (the
   order :func:`load_normalized_csv` returns), ops are the spellings in
@@ -38,6 +40,7 @@ from pathlib import Path
 import numpy as np
 
 from .io import open_maybe_gzip, read_numeric_csv
+from ..graphs import DagSpec
 from .schema import OPS, Constraints, Evictions, TraceSchema
 
 __all__ = ["load_normalized_csv", "write_normalized_csv"]
@@ -98,17 +101,18 @@ def load_normalized_csv(path, *, constraints_path=None,
         raise ValueError(f"trace {path!r}: work and packets must be > 0")
     tiers = (rows[:, 3].astype(np.int32) if n_cols == 4
              else np.zeros(rows.shape[0], np.int32))
-    constraints, evictions, ends_evicted = (Constraints(), Evictions(),
-                                            None)
+    constraints, evictions, ends_evicted, dag = (Constraints(), Evictions(),
+                                                 None, DagSpec())
     if constraints_path is not None:
-        constraints, evictions, ends_evicted = _load_sidecar(
+        constraints, evictions, ends_evicted, dag = _load_sidecar(
             constraints_path, rows.shape[0])
     trace = TraceSchema(t_arrive=t, works=works, packets=packets,
                         priority=tiers, constraints=constraints,
                         evictions=evictions,
                         ends_evicted=(np.zeros(rows.shape[0], np.bool_)
                                       if ends_evicted is None
-                                      else ends_evicted))
+                                      else ends_evicted),
+                        dag=dag)
     if horizon is not None:
         trace = trace.clipped(horizon)
     return trace
@@ -142,7 +146,24 @@ def _load_sidecar(path, m: int):
             raise ValueError(f"sidecar {path!r}: ends_evicted index {tid} "
                              f"outside the {m}-task trace")
         ends[int(tid)] = True
-    return Constraints(names, task, attr, op, value), evictions, ends
+    dag = DagSpec()
+    deps = d.get("deps", ())
+    sizes = d.get("out_size", ())
+    if deps or sizes:
+        out = np.zeros(m, dtype=np.float64)
+        for r in sizes:
+            tid, b = int(r[0]), float(r[1])
+            if not 0 <= tid < m:
+                raise ValueError(f"sidecar {path!r}: out_size index {tid} "
+                                 f"outside the {m}-task trace")
+            out[tid] = b
+        try:
+            dag = DagSpec(child=[int(r[0]) for r in deps],
+                          parent=[int(r[1]) for r in deps],
+                          out_size=out, m=m)
+        except ValueError as e:
+            raise ValueError(f"sidecar {path!r}: {e}") from None
+    return Constraints(names, task, attr, op, value), evictions, ends, dag
 
 
 def write_normalized_csv(trace: TraceSchema, path, *,
@@ -159,7 +180,8 @@ def write_normalized_csv(trace: TraceSchema, path, *,
                      f"{trace.packets[i]:.9g},{int(trace.priority[i])}\n")
     has_sidecar_data = (not trace.constraints.empty
                         or not trace.evictions.empty
-                        or bool(trace.ends_evicted.any()))
+                        or bool(trace.ends_evicted.any())
+                        or trace.has_dag)
     if constraints_path is None or not has_sidecar_data:
         return False
     from .schema import OP_NAMES
@@ -175,5 +197,11 @@ def write_normalized_csv(trace: TraceSchema, path, *,
         "ends_evicted": [int(i) for i in
                          np.flatnonzero(trace.ends_evicted)],
     }
+    if trace.has_dag:
+        dag = trace.dag
+        payload["deps"] = [[int(c), int(p)]
+                           for c, p in zip(dag.child, dag.parent)]
+        payload["out_size"] = [[int(i), float(dag.out_size[i])]
+                               for i in np.flatnonzero(dag.out_size)]
     _write_text(constraints_path, json.dumps(payload, indent=2) + "\n")
     return True

@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..graphs import DagSpec
 from ..runtime.workload import Workload
 
 __all__ = [
@@ -300,6 +301,9 @@ class TraceSchema(Workload):
     evictions: Evictions = field(default_factory=Evictions)
     ends_evicted: np.ndarray = field(
         default_factory=lambda: np.zeros(0, np.bool_))
+    # task-dependency DAG: parent edges + per-task output bytes; an empty
+    # DagSpec means a bag of independent tasks (every trace before PR 7)
+    dag: DagSpec = field(default_factory=DagSpec)
     # the *raw* timestamp (source units, pre-time_scale) that t_arrive=0
     # corresponds to — what companion files on the same raw clock
     # (machine_events) must be re-zeroed against. 0.0 for formats whose
@@ -336,6 +340,12 @@ class TraceSchema(Workload):
             raise ValueError(
                 f"ends_evicted has {ee.shape[0]} entries for {self.m} tasks")
         object.__setattr__(self, "ends_evicted", ee)
+        dag = self.dag
+        if not isinstance(dag, DagSpec):
+            raise TypeError("dag must be a DagSpec instance")
+        if not dag.empty and dag.m != self.m:
+            raise ValueError(
+                f"dag declares {dag.m} tasks but the trace has {self.m}")
         object.__setattr__(self, "t_zero_raw", float(self.t_zero_raw))
 
     @property
@@ -351,6 +361,11 @@ class TraceSchema(Workload):
         """True when the trace carries requeue (eviction) events."""
         return not self.evictions.empty
 
+    @property
+    def has_dag(self) -> bool:
+        """True when the trace carries task-dependency edges."""
+        return not self.dag.empty
+
     def clipped(self, horizon: float) -> "TraceSchema":
         """Tasks arriving before ``horizon`` (constraint and eviction rows
         re-indexed; a kept task keeps its whole eviction schedule, even
@@ -364,6 +379,7 @@ class TraceSchema(Workload):
             constraints=self.constraints.select(idx),
             evictions=self.evictions.select(idx),
             ends_evicted=self.ends_evicted[keep],
+            dag=self.dag.select(idx) if not self.dag.empty else DagSpec(),
             t_zero_raw=self.t_zero_raw)
 
     def feasibility(self, attr_names, attr_matrix) -> np.ndarray:

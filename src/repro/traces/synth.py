@@ -42,6 +42,13 @@ def trace_scale(trace: TraceSchema, factor: float, *, seed: int = 0,
         raise ValueError(f"scale factor must be > 0, got {factor}")
     if n_windows < 1:
         raise ValueError(f"need at least one window, got {n_windows}")
+    if trace.has_dag:
+        raise ValueError(
+            "trace_scale cannot resample a DAG trace: independent "
+            "with-replacement task resampling has no meaningful edge "
+            "semantics (a duplicated parent would gate which child?). "
+            "Scale the underlying trace before attaching dependencies, or "
+            "generate a synthetic DAG via WorkloadSpec(dag={...}).")
     m = trace.m
     if m == 0:
         return trace

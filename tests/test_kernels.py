@@ -9,7 +9,10 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.prefix_scan import prefix_scan_pallas
-from repro.kernels.psts_dispatch import dispatch_positions_pallas
+from repro.kernels.psts_dispatch import (
+    dispatch_positions_pallas,
+    dispatch_work_prefix_pallas,
+)
 from repro.kernels import ops
 
 
@@ -63,6 +66,43 @@ def test_dispatch_positions_matches_moe_layer_semantics():
                                           block_tokens=4)
     assert list(np.asarray(pos)) == [5, 10, 6, 7, 0, 11]
     assert list(np.asarray(fill)) == [12, 1, 8]
+
+
+@pytest.mark.parametrize("r,t,e,bt", [(1, 64, 4, 32), (3, 533, 6, 128),
+                                      (5, 100, 32, 64), (2, 8, 128, 8)])
+def test_dispatch_work_prefix_shapes(r, t, e, bt):
+    rng = np.random.default_rng(r * t + e)
+    e_idx = rng.integers(-1, e, size=(r, t)).astype(np.int32)
+    w = rng.exponential(2.0, size=(r, t)).astype(np.float32)
+    w[e_idx < 0] = 0.0
+    pos, fill = dispatch_work_prefix_pallas(
+        jnp.asarray(e_idx), jnp.asarray(w), n_experts=e, block_tokens=bt)
+    # oracle: running per-destination weight in token order, per row
+    pos_r = np.zeros((r, t), np.float32)
+    fill_r = np.zeros((r, e), np.float32)
+    for i in range(r):
+        acc = np.zeros(e, np.float32)
+        for j in range(t):
+            if e_idx[i, j] >= 0:
+                pos_r[i, j] = acc[e_idx[i, j]]
+                acc[e_idx[i, j]] += w[i, j]
+        fill_r[i] = acc
+    np.testing.assert_allclose(np.asarray(pos), pos_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fill), fill_r,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_work_prefix_unit_weights_match_positions():
+    """With unit weights the weighted prefix IS the positional scan."""
+    rng = np.random.default_rng(9)
+    e_idx = rng.integers(0, 5, size=200).astype(np.int32)
+    pos_i, fill_i = dispatch_positions_pallas(
+        jnp.asarray(e_idx), jnp.zeros(5, jnp.int32), n_experts=5)
+    pos_w, fill_w = dispatch_work_prefix_pallas(
+        jnp.asarray(e_idx[None, :]), jnp.ones((1, 200), jnp.float32),
+        n_experts=5)
+    np.testing.assert_allclose(np.asarray(pos_w)[0], np.asarray(pos_i))
+    np.testing.assert_allclose(np.asarray(fill_w)[0], np.asarray(fill_i))
 
 
 # ---------------------------------------------------------------------------
