@@ -116,7 +116,7 @@ def eviction_horizon_census() -> list[tuple[str, float, str]]:
     t0 = time.perf_counter()
     rt.schedule_workload(trace, failures=sched.failures,
                          joins=sched.joins, resizes=sched.resizes)
-    rt.step_until(cut)
+    rt.advance(until=cut)
     us = (time.perf_counter() - t0) * 1e6
     c = rt.work_census(cut)
     assert c["in_flight"] > 0, "cut landed after the replay drained"

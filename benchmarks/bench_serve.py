@@ -1,0 +1,182 @@
+"""Scheduler-as-a-service benchmarks (PR 8).
+
+* ``serve_online_equivalence`` — the acceptance scenario: the ``online``
+  backend replays the bundled 10k-task Google excerpt (constraints,
+  priority tiers, requeue evictions, machine-events churn) by streaming
+  it through :class:`~repro.serve.SchedulerService` one arrival batch at
+  a time, and its ``Metrics.summary()`` must be **identical** to the
+  offline ``events`` replay. Records the decision counts and the service
+  wall overhead over offline replay (context, not gated).
+* ``serve_decision_throughput`` — decisions per second through the
+  service with a pure-streaming sink (``keep=False``): a dispatch-bound
+  scenario (the headline) and the PSTS-churn scenario (context). Both
+  must clear the 10k decisions/sec bar; ``decisions_per_second`` is
+  relative-gated (higher is better) by ``compare.py``.
+* ``serve_decision_latency`` — per-decision wall latency through the
+  online service, measured by the PR 6 tracer hooks riding the same
+  decision-sink family. ``serve_p99_ms`` must stay under the 1 ms bar —
+  asserted here and enforced as an absolute ceiling by ``compare.py``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import warnings
+
+from repro import lab
+from repro.serve import DecisionLog, SchedulerService
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+EXCERPT = os.path.join(DATA, "google_excerpt_10k.csv.gz")
+CONSTRAINTS = os.path.join(DATA, "google_excerpt_10k_constraints.csv.gz")
+MACHINES = os.path.join(DATA, "google_excerpt_10k_machine_events.csv.gz")
+
+POWERS = (0.3,) * 4 + (0.5,) * 4 + (1.2,) * 4 + (2.2,) * 4
+ATTRS = {"machine_class": (0.0,) * 4 + (1.0,) * 4 + (2.0,) * 4 + (3.0,) * 4}
+
+THROUGHPUT_BAR = 10_000.0  # decisions/sec, acceptance criterion
+LATENCY_BAR_MS = 1.0       # per-decision p99, the PR 6 sub-ms bar
+
+
+def _excerpt_scenario() -> lab.Scenario:
+    return lab.Scenario(
+        name="google-excerpt-churn/psts/serve",
+        cluster=lab.ClusterSpec(powers=POWERS, attrs=ATTRS,
+                                bandwidth=256.0),
+        workload=lab.WorkloadSpec(
+            trace=lab.TraceRef(
+                path=EXCERPT, format="google",
+                params={"constraints_path": CONSTRAINTS,
+                        "eviction_mode": "requeue"},
+                machine_events=MACHINES),
+            horizon=None),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}))
+
+
+def _churn_scenario(obs: lab.ObsSpec | None = None) -> lab.Scenario:
+    """Synthetic PSTS churn twin (same shape as the obs-suite stress)."""
+    return lab.Scenario(
+        name="bursty-serve",
+        cluster=lab.ClusterSpec(n_nodes=16, bandwidth=256.0),
+        workload=lab.WorkloadSpec(
+            process="bursty", horizon=200.0, work_mean=6.0,
+            params={"rate_lo": 0.5, "rate_hi": 18.0,
+                    "sojourn_lo": 25.0, "sojourn_hi": 6.0}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        faults=lab.FaultSpec(failures=((40.0, 2),), joins=((120.0, 2),)),
+        obs=obs)
+
+
+def _dispatch_scenario() -> lab.Scenario:
+    """Dispatch-bound: every event is a decision, no rebalance sweeps —
+    the throughput headline measures the service machinery itself."""
+    return lab.Scenario(
+        name="dispatch-serve",
+        cluster=lab.ClusterSpec(n_nodes=16, bandwidth=256.0),
+        workload=lab.WorkloadSpec(process="poisson", horizon=200.0,
+                                  work_mean=4.0, params={"rate": 10.0}),
+        policy=lab.PolicySpec("jsq"),
+        seed=1)
+
+
+def _stream(scenario: lab.Scenario) -> tuple[float, dict]:
+    """One arrival-paced streaming run; (stepping wall seconds, counts).
+    Scenario lowering and trace parsing stay outside the clock — the
+    number is decisions through the *service*, not file I/O."""
+    log = DecisionLog(keep=False)  # pure streaming: nothing retained
+    svc = SchedulerService.from_scenario(scenario, log=log)
+    src = svc.session._sources[0]
+    t0 = time.perf_counter()
+    while not src.exhausted:
+        svc.advance(until=src.next_time)
+    svc.drain()
+    svc.close()
+    return time.perf_counter() - t0, dict(log.counts)
+
+
+def serve_online_equivalence() -> list[tuple[str, float, str]]:
+    """Online backend == offline events replay on the 10k excerpt."""
+    sc = _excerpt_scenario()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # fallback-duration census
+        t0 = time.perf_counter()
+        e = lab.run(sc, backend="events")
+        events_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        o = lab.run(sc, backend="online")
+        online_s = time.perf_counter() - t0
+    assert o.metrics == e.metrics, (
+        "online service diverged from offline replay on the excerpt")
+    assert (o.extras.get("work_census")
+            == e.extras.get("work_census")), "work census diverged"
+    counts = o.backend_options["decisions"]
+    overhead = max(online_s - events_s, 0.0) / events_s
+    return [(
+        "serve/equivalence/google_excerpt_10k", online_s * 1e6,
+        f"online_matches_events={int(o.metrics == e.metrics)};"
+        f"completed={o['completed']};"
+        f"decisions={sum(counts.values())};"
+        f"micro_steps={o.backend_options['micro_steps']};"
+        f"streaming_overhead_frac={overhead:.4f}")]
+
+
+def serve_decision_throughput() -> list[tuple[str, float, str]]:
+    """Decisions/sec through the streaming service, best of 3 (load
+    spikes on shared runners only ever slow a run down)."""
+    rows = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for tag, sc in (("dispatch", _dispatch_scenario()),
+                        ("psts_churn", _churn_scenario())):
+            _stream(sc)  # warm
+            best, counts = float("inf"), {}
+            for _ in range(3):
+                wall, c = _stream(sc)
+                if wall < best:
+                    best, counts = wall, c
+            total = sum(counts.values())
+            dps = total / best
+            assert dps >= THROUGHPUT_BAR, (
+                f"{tag}: {dps:,.0f} decisions/sec under the "
+                f"{THROUGHPUT_BAR:,.0f} bar")
+            rows.append((
+                f"serve/throughput/{tag}", best * 1e6,
+                f"decisions_per_second={dps:.0f};"
+                f"decisions={total};"
+                f"places={counts['place']};migrates={counts['migrate']};"
+                f"completes={counts['complete']}"))
+    return rows
+
+
+def serve_decision_latency() -> list[tuple[str, float, str]]:
+    """Per-decision wall latency through the online service, via the
+    PR 6 tracer hooks. The gated figure is the worst per-decision p99
+    across the decision kinds (place, trigger verdict); whole rebalance
+    sweeps move many tasks per decision and ride along as context."""
+    best: dict[str, dict] = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for _ in range(2):  # best-of on p99: noise only inflates
+            r = lab.run(_churn_scenario(lab.ObsSpec(trace=True)),
+                        backend="online")
+            for kind, s in r.extras["obs"]["decision_stats"].items():
+                if kind not in best or s["p99_us"] < best[kind]["p99_us"]:
+                    best[kind] = s
+    p99_ms = max(best[k]["p99_us"] for k in ("place", "trigger")) / 1000.0
+    assert p99_ms < LATENCY_BAR_MS, (
+        f"per-decision p99 {p99_ms:.3f} ms breaches the "
+        f"{LATENCY_BAR_MS} ms bar")
+    sweep = best.get("rebalance", {"n": 0, "mean_us": 0.0, "p99_us": 0.0})
+    return [(
+        "serve/latency/per_decision", best["place"]["mean_us"],
+        f"serve_p99_ms={p99_ms:.4f};"
+        f"place_p99_us={best['place']['p99_us']:.2f};"
+        f"trigger_p99_us={best['trigger']['p99_us']:.2f};"
+        f"sweep_n={sweep['n']};sweep_p99_us={sweep['p99_us']:.2f}")]
+
+
+ALL = [serve_online_equivalence, serve_decision_throughput,
+       serve_decision_latency]

@@ -49,12 +49,15 @@ HIGHER_IS_BETTER = (
     "locality_hit_ratio",  # DAG children placed with their input (PR 7)
     "cp_stretch_improvement",  # locality vs locality-blind margin (PR 7)
     "tasks_per_second",
+    "decisions_per_second",  # streaming-service throughput (PR 8)
+    "online_matches_events",  # 1 while the equivalence property holds
 )
 # absolute ceilings enforced on the fresh run alone, no baseline needed:
 # wall-clock ratios drift run-to-run (relative gating would be noise) but
 # must stay under a hard bar. Keys match by exact name or prefix.
 ABS_CEILINGS = {
     "telemetry_overhead_frac": 0.05,  # obs enabled-vs-disabled delta (PR 6)
+    "serve_p99_ms": 1.0,  # per-decision p99 through the service (PR 8)
 }
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = 1e-9

@@ -74,6 +74,11 @@ def _suites():
         suites.append(("dag", bench_dag.ALL))
     except ImportError:
         pass
+    try:
+        from . import bench_serve
+        suites.append(("serve", bench_serve.ALL))
+    except ImportError:
+        pass
     return suites
 
 

@@ -3,6 +3,38 @@ of a multi-pod JAX training/serving framework.
 
 Paper: "Dynamic Task Scheduling in Computing Cluster Environments",
 Savvas & Kechadi. See DESIGN.md for the system map.
+
+Stable public API (PR 8) — the names most users need, re-exported here::
+
+    from repro import Scenario, run, sweep, RunResult   # offline lab
+    from repro import SchedulerService                   # online service
+
+Everything re-exports lazily (PEP 562): ``import repro`` stays free of
+numpy/jax imports until a name is actually touched.
 """
 
 __version__ = "1.0.0"
+
+# name -> providing submodule; resolution is lazy so `import repro` costs
+# nothing and the jax-dependent serving engine is only touched on demand
+_PUBLIC_API = {
+    "Scenario": "lab",
+    "run": "lab",
+    "sweep": "lab",
+    "RunResult": "lab",
+    "SchedulerService": "serve",
+}
+
+__all__ = ["__version__", *_PUBLIC_API]
+
+
+def __getattr__(name):
+    if name in _PUBLIC_API:
+        import importlib
+        mod = importlib.import_module(f".{_PUBLIC_API[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_PUBLIC_API))

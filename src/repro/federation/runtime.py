@@ -126,6 +126,8 @@ class FederatedRuntime:
             self._scheduled += wl.m
             self.runtimes.append(rt)
         self.stats = ExchangeStats()
+        self._t = 0.0
+        self._epochs = 0
         # (t_land, dst, work) for WAN transfers not yet landed — counted
         # into the destination's effective load so an epoch cannot oversend
         self._wan_inflight: list[tuple[float, int, float]] = []
@@ -190,7 +192,7 @@ class FederatedRuntime:
                 rt.withdraw(task)
                 task.migrations += 1
                 t_land = t + delay
-                self.runtimes[dst].inject(task, t_land)
+                self.runtimes[dst].submit(task, t_land, arrival=False)
                 self._wan_inflight.append((t_land, dst, task.work))
                 self._sent[task.tid] = task.work
                 self.stats.migrations += 1
@@ -253,27 +255,68 @@ class FederatedRuntime:
                 f"{self._scheduled} but completed={completed} + live={live}")
 
     # -- driver -------------------------------------------------------------
-    def run(self, *, max_epochs: int = 200_000) -> FederationReport:
+    # The federation speaks the same driving verbs as ClusterRuntime and
+    # SchedulerService: submit / withdraw / advance / drain. One epoch —
+    # step every member to the boundary, exchange, sample, audit — is the
+    # federation's indivisible micro-step.
+
+    def submit(self, task, t: float | None = None, *,
+               member: int = 0) -> None:
+        """Admit one live task into ``member`` at time ``t`` (default:
+        now). Counts as a scheduled arrival for the conservation audit."""
+        self.runtimes[member].submit(task, self._t if t is None else t)
+        self._scheduled += 1
+
+    def withdraw(self, task) -> None:
+        """Remove a queued task from whichever member holds it; it stops
+        being the federation's to conserve."""
+        for rt in self.runtimes:
+            if rt.tasks.get(task.tid) is task:
+                rt.withdraw(task)
+                self._scheduled -= 1
+                return
+        raise ValueError(f"task {task.tid} is not queued in any member")
+
+    def _epoch(self) -> None:
+        self._epochs += 1
+        self._t += self.federation.exchange_period
+        for rt in self.runtimes:
+            rt.advance(until=self._t, max_events=2_000_000, strict=True)
+        if self.links:
+            self._exchange(self._t)
+            self.stats.epochs += 1
+        if self.wan_stream is not None:
+            self._sample_wan(self._t)
+        self._check_conservation(f"at epoch t={self._t}")
+
+    def advance(self, until: float | None = None, *,
+                max_epochs: int = 200_000) -> int:
+        """Advance whole epochs while work is pending and the next epoch
+        boundary is <= ``until`` (``None``: until idle); returns the
+        number of epochs run."""
         period = self.federation.exchange_period
-        t, epochs = 0.0, 0
+        n = 0
         while any(rt.pending_work() for rt in self.runtimes):
-            epochs += 1
-            if epochs > max_epochs:
+            if until is not None and self._t + period > until:
+                break
+            n += 1
+            if n > max_epochs:
                 raise RuntimeError(f"epoch budget exhausted ({max_epochs})")
-            t += period
-            for rt in self.runtimes:
-                rt.step_until(t)
-            if self.links:
-                self._exchange(t)
-                self.stats.epochs += 1
-            if self.wan_stream is not None:
-                self._sample_wan(t)
-            self._check_conservation(f"at epoch t={t}")
+            self._epoch()
+        return n
+
+    def drain(self, *, max_epochs: int = 200_000) -> FederationReport:
+        """Run every member dry, then audit and report."""
+        self.advance(max_epochs=max_epochs)
         self._finalize()
         members = [rt.metrics for rt in self.runtimes]
         return FederationReport(aggregate=aggregate_metrics(members),
                                 members=members, wan=self.stats,
-                                epochs=epochs)
+                                epochs=self._epochs)
+
+    def run(self, *, max_epochs: int = 200_000) -> FederationReport:
+        """Convenience over the session verbs: ``drain()``."""
+        return self.drain(max_epochs=max_epochs)
 
     def _finalize(self) -> None:
         completed = sum(rt.metrics.completed for rt in self.runtimes)

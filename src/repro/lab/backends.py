@@ -43,6 +43,9 @@ __all__ = [
     "BatchedBackend",
     "LegacyBackend",
     "BATCHED_POLICIES",
+    "build_events_runtime",
+    "assemble_events_result",
+    "events_eligible",
 ]
 
 # policies expressible without per-task state (the batched backend's limit)
@@ -89,6 +92,10 @@ def get_backend(name: str) -> Backend:
         # registration lives in repro.federation, which imports this module;
         # importing it eagerly at module top would be a cycle
         from ..federation import backend as _federation_backend  # noqa: F401
+    if name == "online" and name not in BACKENDS:
+        # the scheduler-as-a-service backend lives in repro.serve; same
+        # cycle-avoidance as the federated hook above
+        from ..serve import backend as _serve_backend  # noqa: F401
     if name not in BACKENDS:
         raise ValueError(f"unknown backend {name!r}; have {sorted(BACKENDS)}")
     return BACKENDS[name]
@@ -212,78 +219,108 @@ def _constraint_problem(scenario: Scenario) -> str | None:
 # events — scalar discrete-event engine
 # ---------------------------------------------------------------------------
 
+def build_events_runtime(scenario: Scenario, **runtime_extra):
+    """Shared lowering for the events backend and the online
+    (scheduler-as-a-service) backend: one scenario becomes one configured
+    :class:`~repro.runtime.ClusterRuntime` plus its realized workload,
+    instruments, and fault schedule. Keeping construction in one place is
+    what makes online/offline ``Metrics.summary()`` byte-identical."""
+    from ..obs import build_instruments
+    from ..runtime.runtime import ClusterRuntime
+    wl = scenario.workload.materialize(scenario.seed)
+    faults = resolve_fault_schedule(scenario)
+    ins = build_instruments(scenario.obs)
+    rt = ClusterRuntime(
+        scenario.cluster.resolve_powers(), scenario.policy.name,
+        d=scenario.cluster.d,
+        trigger_period=scenario.policy.trigger_period,
+        bandwidth=scenario.cluster.bandwidth,
+        link_bandwidth=scenario.cluster.link_bandwidth,
+        seed=scenario.engine_seed,
+        policy_kwargs=dict(scenario.policy.params),
+        node_attrs=scenario.cluster.resolve_attrs(),
+        constraint_blind=scenario.policy.constraint_mode == "blind",
+        **ins.runtime_kwargs(), **runtime_extra)
+    return rt, wl, ins, faults
+
+
+def assemble_events_result(scenario: Scenario, rt, wl, ins, *,
+                           backend: str, backend_options: dict) -> RunResult:
+    """Shared result assembly for the events/online backends: the same
+    metrics schema and the same extras (tier breakdowns, work census,
+    telemetry export) regardless of whether the trace was replayed offline
+    or streamed in incrementally."""
+    from ..obs import export_obs
+    from ..traces import TraceSchema
+    m = rt.metrics
+    if scenario.workload.m_tasks is not None:
+        # the realized arrival process decides the count here
+        backend_options.setdefault("ignored", []).append(
+            "workload.m_tasks")
+    extras = {}
+    if isinstance(wl, TraceSchema) and (wl.n_tiers > 1
+                                        or wl.constrained):
+        # the per-tier breakdown trace experiments compare policies
+        # on; keys are strings so the result JSON round-trips
+        extras["wait_by_tier"] = {
+            str(tier): stats for tier, stats in m.wait_by_tier().items()
+        }
+        extras["tier_counts"] = {
+            str(t): c for t, c in wl.tier_counts().items()}
+    wl_dag = getattr(wl, "dag", None)
+    if (isinstance(wl, TraceSchema) and (wl.preempted
+                                         or wl.ends_evicted.any())) \
+            or (wl_dag is not None and not wl_dag.empty):
+        # end-of-run work audit for churn replays and DAG frontiers:
+        # everything admitted is completed, and the waste the churn
+        # burned is on record
+        extras["work_census"] = {
+            k: v for k, v in rt.work_census().items()
+            if k in ("admitted", "completed", "wasted",
+                     "in_flight", "conservation_gap")}
+    if ins.any:
+        extras["obs"] = export_obs(ins)
+    return RunResult(
+        fingerprint=scenario.fingerprint(), backend=backend,
+        backend_options=backend_options,
+        metrics=make_metrics(**m.summary()),
+        extras=extras,
+        scenario_name=scenario.name)
+
+
+def events_eligible(scenario: Scenario) -> str | None:
+    """Eligibility for the discrete-event engine (shared by the events and
+    online backends — anything the engine can replay it can also stream)."""
+    from ..runtime.policies import make_policy
+    bad = _single_cluster_only(scenario)
+    if bad is not None:
+        return bad
+    try:  # unknown names AND param/constructor mismatches, one reason
+        make_policy(scenario.policy.name, **dict(scenario.policy.params))
+    except (TypeError, ValueError) as exc:
+        return str(exc)
+    return (_fault_nodes_in_range(scenario) or _dag_problem(scenario)
+            or _trace_problem(scenario) or _constraint_problem(scenario))
+
+
 @register_backend
 class EventsBackend(Backend):
     name = "events"
 
     def eligible(self, scenario):
-        from ..runtime.policies import make_policy
-        bad = _single_cluster_only(scenario)
-        if bad is not None:
-            return bad
-        try:  # unknown names AND param/constructor mismatches, one reason
-            make_policy(scenario.policy.name, **dict(scenario.policy.params))
-        except (TypeError, ValueError) as exc:
-            return str(exc)
-        return (_fault_nodes_in_range(scenario) or _dag_problem(scenario)
-                or _trace_problem(scenario) or _constraint_problem(scenario))
+        return events_eligible(scenario)
 
     def run(self, scenario, **options):
-        from ..obs import build_instruments, export_obs
-        from ..runtime.runtime import ClusterRuntime
-        from ..traces import TraceSchema
         self.check(scenario)
         if options:
             raise TypeError(f"events backend takes no options: "
                             f"{sorted(options)}")
-        wl = scenario.workload.materialize(scenario.seed)
-        failures, joins, resizes = resolve_fault_schedule(scenario)
-        ins = build_instruments(scenario.obs)
-        rt = ClusterRuntime(
-            scenario.cluster.resolve_powers(), scenario.policy.name,
-            d=scenario.cluster.d,
-            trigger_period=scenario.policy.trigger_period,
-            bandwidth=scenario.cluster.bandwidth,
-            link_bandwidth=scenario.cluster.link_bandwidth,
-            seed=scenario.engine_seed,
-            policy_kwargs=dict(scenario.policy.params),
-            node_attrs=scenario.cluster.resolve_attrs(),
-            constraint_blind=scenario.policy.constraint_mode == "blind",
-            **ins.runtime_kwargs())
-        m = rt.run(wl, failures=failures, joins=joins, resizes=resizes)
-        options = {"model": "discrete-event"}
-        if scenario.workload.m_tasks is not None:
-            # the realized arrival process decides the count here
-            options["ignored"] = ["workload.m_tasks"]
-        extras = {}
-        if isinstance(wl, TraceSchema) and (wl.n_tiers > 1
-                                            or wl.constrained):
-            # the per-tier breakdown trace experiments compare policies
-            # on; keys are strings so the result JSON round-trips
-            extras["wait_by_tier"] = {
-                str(tier): stats for tier, stats in m.wait_by_tier().items()
-            }
-            extras["tier_counts"] = {
-                str(t): c for t, c in wl.tier_counts().items()}
-        wl_dag = getattr(wl, "dag", None)
-        if (isinstance(wl, TraceSchema) and (wl.preempted
-                                             or wl.ends_evicted.any())) \
-                or (wl_dag is not None and not wl_dag.empty):
-            # end-of-run work audit for churn replays and DAG frontiers:
-            # everything admitted is completed, and the waste the churn
-            # burned is on record
-            extras["work_census"] = {
-                k: v for k, v in rt.work_census().items()
-                if k in ("admitted", "completed", "wasted",
-                         "in_flight", "conservation_gap")}
-        if ins.any:
-            extras["obs"] = export_obs(ins)
-        return RunResult(
-            fingerprint=scenario.fingerprint(), backend=self.name,
-            backend_options=options,
-            metrics=make_metrics(**m.summary()),
-            extras=extras,
-            scenario_name=scenario.name)
+        rt, wl, ins, (failures, joins, resizes) = \
+            build_events_runtime(scenario)
+        rt.run(wl, failures=failures, joins=joins, resizes=resizes)
+        return assemble_events_result(
+            scenario, rt, wl, ins, backend=self.name,
+            backend_options={"model": "discrete-event"})
 
 
 # ---------------------------------------------------------------------------

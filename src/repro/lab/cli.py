@@ -22,6 +22,7 @@ import sys
 from pathlib import Path
 
 from ..federation import Federation, TopologySpec
+from ..serve import backend as _serve_backend  # noqa: F401 — registers "online"
 from .api import BATCH_THRESHOLD, expand_grid, run, sweep
 from .backends import BACKENDS
 from .specs import (
@@ -228,6 +229,48 @@ def _trace_cmd(args) -> int:
     return 0
 
 
+def _serve_cmd(args, scenario) -> int:
+    """Run a scenario as an online scheduling service: decisions stream
+    out as JSONL while tasks stream in (scenario workload and/or a JSONL
+    feed), the final metrics land on stderr / ``--out``."""
+    from ..serve import DecisionLog, JsonlSource, SchedulerService
+    if getattr(scenario, "is_federation", False):
+        raise SystemExit("serve drives a single Scenario; run a Federation "
+                         "on the federated backend")
+    sink = (open(args.decisions_out, "w") if args.decisions_out
+            else sys.stdout)
+    try:
+        log = DecisionLog(
+            keep=False,
+            on_decision=lambda d: print(json.dumps(d.to_dict()), file=sink))
+        svc = SchedulerService.from_scenario(
+            scenario, attach_workload=not args.no_workload, log=log)
+        if args.feed:
+            svc.attach(JsonlSource(args.feed))
+        if args.step is not None:
+            if args.step <= 0:
+                raise SystemExit(f"--step must be > 0, got {args.step}")
+            while svc.session.pending_sources:
+                svc.advance(until=svc.now + args.step)
+        svc.drain()
+        svc.close()
+    finally:
+        if sink is not sys.stdout:
+            sink.close()
+    summary = svc.summary()
+    payload = {"scenario": getattr(scenario, "name", None),
+               "metrics": summary, "decisions": dict(log.counts)}
+    if args.out:
+        Path(args.out).write_text(
+            json.dumps(payload, indent=2, sort_keys=True, allow_nan=False)
+            + "\n")
+    print(f"served {summary['completed']} task(s): "
+          f"makespan={summary['makespan']:.3f} "
+          f"mean_response={summary['mean_response']:.3f} "
+          f"decisions={sum(log.counts.values())}", file=sys.stderr)
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.lab",
@@ -269,6 +312,28 @@ def main(argv: list[str] | None = None) -> int:
     p_back = sub.add_parser("backends",
                             help="eligibility report for a scenario file")
     p_back.add_argument("scenario")
+
+    p_srv = sub.add_parser(
+        "serve", help="run a scenario as an online scheduling service: "
+                      "stream decisions out as JSONL while tasks stream in")
+    p_srv.add_argument("scenario")
+    p_srv.add_argument("--feed", default=None, metavar="FILE",
+                       help="JSONL task feed ('-' = stdin), one task per "
+                            "line, e.g. {\"t\": 0.5, \"work\": 2.0, "
+                            "\"packets\": 3}; streams on top of the "
+                            "scenario's own workload")
+    p_srv.add_argument("--no-workload", action="store_true",
+                       help="ignore the scenario's workload; schedule only "
+                            "the --feed tasks")
+    p_srv.add_argument("--step", type=float, default=None,
+                       help="fixed micro-step width in sim time units "
+                            "(default: pace on arrival times)")
+    p_srv.add_argument("--decisions-out", default=None, metavar="FILE",
+                       help="write the decision JSONL here instead of "
+                            "stdout")
+    p_srv.add_argument("--out", default=None,
+                       help="write final metrics + decision counts JSON "
+                            "here")
 
     from ..traces import TRACE_FORMATS
     p_tr = sub.add_parser(
@@ -314,6 +379,9 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     scenario = _load_scenario(args.scenario)
+
+    if args.cmd == "serve":
+        return _serve_cmd(args, scenario)
 
     if args.cmd == "backends":
         for name in sorted(BACKENDS):

@@ -27,11 +27,23 @@ accounted on top.
 
 Every policy (``repro.runtime.policies``) runs under the identical engine and
 reports through the shared ``Metrics`` accumulator.
+
+Session lifecycle (PR 8): the monolithic ``run()`` is a convenience over
+four explicit primitives — ``schedule_workload`` / ``submit`` feed work in,
+``advance(until=..., max_events=...)`` moves the clock in bounded
+micro-steps, ``drain()`` runs the queue dry. ``open_session()`` returns a
+:class:`repro.serve.session.Session` handle over exactly these verbs, and
+``repro.serve.SchedulerService`` streams tasks through it online. The
+canonical driving verbs are ``submit`` / ``withdraw`` / ``advance`` /
+``drain`` (shared with ``FederatedRuntime`` and ``SchedulerService``);
+``inject`` and ``step_until`` remain as deprecated spellings.
 """
 
 from __future__ import annotations
 
+import math
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -132,7 +144,8 @@ class ClusterRuntime:
                  policy_kwargs: dict | None = None,
                  node_attrs: dict | None = None,
                  constraint_blind: bool = False,
-                 tracer=None, probe=None, trigger_monitor=None):
+                 tracer=None, probe=None, trigger_monitor=None,
+                 decision_sink=None):
         powers = np.asarray(powers, dtype=np.float64)
         self._base_powers = powers.copy()   # nominal, never mutated
         self._powers_full = powers.copy()   # current (resize-adjusted)
@@ -189,6 +202,11 @@ class ClusterRuntime:
         self._tr = tracer
         self._probe = probe
         self._mon = trigger_monitor
+        # online decision feed (repro.serve): an object with place/migrate/
+        # evict/trigger/complete methods, called as decisions happen. Like
+        # the tracer it guards on `is not None` and reads engine state only
+        # — enabling it changes no Metrics.summary() value
+        self._sink = decision_sink
         # probe fast path: queued work per node / per tier maintained
         # incrementally at every queue mutation, so a probe sample is
         # O(nodes) instead of O(queued tasks). Only kept while probes are
@@ -382,6 +400,8 @@ class ClusterRuntime:
         # overhead budget's hottest line, and the placement outcome is
         # already in the trace (service span carries the node, evict/
         # migrate/fail events mark every re-placement cause)
+        if self._sink is not None:
+            self._sink.place(t, task, node)
         self._enqueue(node, task)
         self._try_start(node, t)
 
@@ -518,6 +538,8 @@ class ClusterRuntime:
                     self._tr.span("migrate", t, t + delay, tid=task.tid,
                                   cat="migrate",
                                   args={"src": task.node, "dst": dst})
+                if self._sink is not None:
+                    self._sink.migrate(t, task, task.node, dst)
                 self._queues[task.node].remove(task)
                 if self._track:
                     self._unqueue(task.node, task)
@@ -564,6 +586,8 @@ class ClusterRuntime:
             response=t - task.t_arrive,
             wait=t_started - task.t_arrive,
             t_finish=t, tier=task.priority, work=task.work)
+        if self._sink is not None:
+            self._sink.complete(t, task, node)
         if self._tr is not None:
             # the completed attempt's service span carries no args dict
             # (an args-free record leaves nothing GC-tracked behind); the
@@ -616,6 +640,9 @@ class ClusterRuntime:
                                      or task.node >= 0):
             self._tr.instant("evict", t, tid=tid, cat="lifecycle",
                              args={"running": task.t_start is not None})
+        if self._sink is not None and (task.t_start is not None
+                                       or task.node >= 0):
+            self._sink.evict(t, task, task.t_start is not None)
         if task.t_start is not None:  # running: the attempt is lost
             node = task.node
             self._interrupt(task, node, t)
@@ -733,6 +760,8 @@ class ClusterRuntime:
                 self._tr.decision("trigger", time.perf_counter() - _t0)
             if dec is not None:
                 self.metrics.trigger_evals += 1
+                if self._sink is not None:
+                    self._sink.trigger(t, bool(dec.trigger))
                 if self._mon is not None:
                     self._mon.record(
                         t, dec, floor=float(getattr(self.policy, "floor",
@@ -829,21 +858,114 @@ class ClusterRuntime:
         self.tasks.pop(task.tid, None)
         task.node = -1
 
+    def submit(self, task: Task, t: float | None = None, *,
+               arrival: bool = True, evictions=()) -> None:
+        """Deliver one task — the canonical live-admission verb.
+
+        ``arrival=True`` (the default) admits a *new* task at time ``t``
+        (default: now): it counts as a local arrival, exactly as if
+        ``schedule_workload`` had known about it upfront. DAG parents are
+        wired incrementally (parents already finished count as released),
+        and ``evictions`` schedules exogenous requeue events addressed to
+        this task (times already in the past are dropped — an offline
+        replay would have fired them before the arrival as no-ops).
+
+        ``arrival=False`` delivers a federation hand-off: the local policy
+        places it on landing and it does not count as a local arrival —
+        the source cluster already observed it.
+
+        The trigger/probe chains revive if they have died out idle. For
+        arrivals they re-arm on the absolute ``k * period`` grid — the
+        same phase an offline replay evaluates on, which is what makes
+        incremental feeding reproduce offline metrics exactly. Hand-offs
+        keep the legacy ``t + period`` phase (they have no offline twin)."""
+        t = self._now if t is None else float(t)
+        if t < self._now:
+            raise ValueError(f"cannot submit at t={t}: clock is at "
+                             f"{self._now}")
+        if not arrival:
+            self.tasks[task.tid] = task
+            task.node = -1
+            self._eq.push(t, EventKind.MIGRATION_ARRIVE, (task, -1))
+            # revive the trigger chain: an idle member stops re-arming, but
+            # injected work must still be eligible for rebalancing
+            if (self.policy.uses_trigger and self.trigger_period > 0
+                    and not self._eq.pending(EventKind.TRIGGER_EVAL)):
+                self._eq.push(t + self.trigger_period,
+                              EventKind.TRIGGER_EVAL)
+            if (self._probe is not None
+                    and not self._eq.pending(EventKind.PROBE_SAMPLE)):
+                self._eq.push(t + self._probe.every, EventKind.PROBE_SAMPLE)
+            return
+        if task.tid in self.tasks:
+            raise ValueError(f"task id {task.tid} already admitted")
+        if task.parents:
+            # incremental DAG wiring: count + register only the parents
+            # still unfinished; completions between now and the arrival
+            # decrement through _children like the offline pre-wired path
+            left = 0
+            for pid in task.parents:
+                p = self.tasks.get(pid)
+                if p is not None and p.t_finish is not None:
+                    continue
+                left += 1
+                self._children.setdefault(pid, []).append(task.tid)
+            if left:
+                self._pending_parents[task.tid] = left
+        self._eq.push(t, EventKind.ARRIVAL, task)
+        for te in evictions:
+            te = float(te)
+            if te >= self._now:
+                self._eq.push(te, EventKind.EVICTION, task.tid)
+        self._arm_chains()
+
     def inject(self, task: Task, t: float) -> None:
-        """Deliver a task arriving from outside (a federation hand-off) at
-        time ``t``; the local policy places it on landing. Does not count as
-        a local arrival — the source cluster already observed it."""
-        self.tasks[task.tid] = task
-        task.node = -1
-        self._eq.push(t, EventKind.MIGRATION_ARRIVE, (task, -1))
-        # revive the trigger chain: an idle member stops re-arming, but
-        # injected work must still be eligible for rebalancing
-        if (self.policy.uses_trigger and self.trigger_period > 0
+        """Deprecated spelling of ``submit(task, t, arrival=False)``."""
+        warnings.warn("ClusterRuntime.inject() is deprecated; use "
+                      "submit(task, t, arrival=False)", DeprecationWarning,
+                      stacklevel=2)
+        self.submit(task, t, arrival=False)
+
+    def _arm_chains(self) -> None:
+        """Revive dead trigger/probe chains on the absolute grid: the next
+        ``k * period`` strictly after now. An offline replay arms once at
+        ``period`` and re-arms ``t + period`` forever (future arrivals keep
+        the chain alive), so its evaluations land exactly on this grid;
+        evaluations the online chain missed while dead had empty queues and
+        touch no metric, so grid re-arming restores exact equivalence."""
+        period = self.trigger_period
+        if (self.policy.uses_trigger and period > 0
                 and not self._eq.pending(EventKind.TRIGGER_EVAL)):
-            self._eq.push(t + self.trigger_period, EventKind.TRIGGER_EVAL)
+            k = math.floor(self._now / period + 1e-9) + 1
+            self._eq.push(k * period, EventKind.TRIGGER_EVAL)
         if (self._probe is not None
                 and not self._eq.pending(EventKind.PROBE_SAMPLE)):
-            self._eq.push(t + self._probe.every, EventKind.PROBE_SAMPLE)
+            every = self._probe.every
+            k = math.floor(self._now / every + 1e-9) + 1
+            self._eq.push(k * every, EventKind.PROBE_SAMPLE)
+
+    def schedule_eviction(self, tid: int, t: float) -> None:
+        """Schedule one exogenous eviction addressed by task id. Fires
+        before the task arrives (or after it finished) are no-ops, so a
+        whole trace's eviction stream can be installed upfront — in row
+        order, preserving offline tie-breaking — while arrivals stream."""
+        self._eq.push(float(t), EventKind.EVICTION, int(tid))
+
+    def post_failure(self, node: int, t: float | None = None) -> None:
+        """Schedule a node failure at ``t`` (default: now)."""
+        self._eq.push(self._now if t is None else float(t),
+                      EventKind.NODE_FAIL, int(node))
+
+    def post_join(self, node: int, t: float | None = None) -> None:
+        """Schedule a node (re)join at ``t`` (default: now)."""
+        self._eq.push(self._now if t is None else float(t),
+                      EventKind.NODE_JOIN, int(node))
+
+    def post_resize(self, node: int, fraction: float,
+                    t: float | None = None) -> None:
+        """Schedule a capacity resize at ``t`` (default: now)."""
+        self._eq.push(self._now if t is None else float(t),
+                      EventKind.NODE_RESIZE, (int(node), float(fraction)))
 
     def _resolve_feasibility(self, workload) -> list | None:
         """Per-task feasibility masks over grid slots, or ``None`` for
@@ -945,21 +1067,26 @@ class ClusterRuntime:
         evictions = getattr(workload, "evictions", None)
         if evictions is not None and not evictions.empty:
             for j in range(evictions.k):
-                self._eq.push(float(evictions.time[j]), EventKind.EVICTION,
-                              tid_base + int(evictions.task[j]))
-        for t, node in failures:
-            self._eq.push(t, EventKind.NODE_FAIL, int(node))
-        for t, node in joins:
-            self._eq.push(t, EventKind.NODE_JOIN, int(node))
-        for t, node, fraction in resizes:
-            self._eq.push(t, EventKind.NODE_RESIZE,
-                          (int(node), float(fraction)))
+                self.schedule_eviction(tid_base + int(evictions.task[j]),
+                                       float(evictions.time[j]))
+        self.schedule_faults(failures=failures, joins=joins,
+                             resizes=resizes)
         if (self.policy.uses_trigger and self.trigger_period > 0
                 and not self._eq.pending(EventKind.TRIGGER_EVAL)):
             self._eq.push(self.trigger_period, EventKind.TRIGGER_EVAL)
         if (self._probe is not None
                 and not self._eq.pending(EventKind.PROBE_SAMPLE)):
             self._eq.push(self._probe.every, EventKind.PROBE_SAMPLE)
+
+    def schedule_faults(self, *, failures=(), joins=(), resizes=()) -> None:
+        """Queue machine events: ``failures``/``joins`` are ``(time, node)``
+        sequences, ``resizes`` are ``(time, node, fraction)``."""
+        for t, node in failures:
+            self.post_failure(node, t)
+        for t, node in joins:
+            self.post_join(node, t)
+        for t, node, fraction in resizes:
+            self.post_resize(node, fraction, t)
 
     def _dispatch(self, ev) -> None:
         if ev.kind == EventKind.ARRIVAL:
@@ -981,45 +1108,79 @@ class ClusterRuntime:
         elif ev.kind == EventKind.PROBE_SAMPLE:
             self._on_probe(ev.time)
 
-    def step_until(self, t: float, *, max_events: int = 2_000_000) -> int:
-        """Process every event at time <= ``t`` (the lockstep primitive the
-        federation layer drives members with); returns the event count."""
+    def advance(self, until: float | None = None, *,
+                max_events: int | None = None, strict: bool = False) -> int:
+        """Advance the clock in one bounded micro-step — the session
+        primitive everything else is built on.
+
+        Processes events in timestamp order while ``peek <= until``
+        (``until=None`` runs the queue dry) and at most ``max_events`` of
+        them; returns the number processed. Unprocessed events stay queued
+        for the next call, so a service loop can interleave ``advance``
+        with live ``submit``/``withdraw`` at any granularity. With
+        ``strict=True`` exhausting the budget raises instead of returning
+        (the legacy ``run``/``step_until`` contract)."""
         n_events = 0
-        while self._eq and self._eq.peek_time() <= t:
-            n_events += 1
-            if n_events > max_events:
-                raise RuntimeError(f"event budget exhausted ({max_events})")
+        while self._eq and (until is None
+                            or self._eq.peek_time() <= until):
+            if max_events is not None and n_events >= max_events:
+                if strict:
+                    raise RuntimeError(
+                        f"event budget exhausted ({max_events})")
+                return n_events
             ev = self._eq.pop()
+            n_events += 1
             self._now = ev.time
             self._dispatch(ev)
-        self._now = max(self._now, t)
+        if until is not None:
+            self._now = max(self._now, until)
         return n_events
+
+    def drain(self, *, max_events: int = 2_000_000) -> Metrics:
+        """Run the event queue dry and return the metrics."""
+        self.advance(max_events=max_events, strict=True)
+        return self.metrics
+
+    def open_session(self):
+        """Open a :class:`repro.serve.session.Session` over this runtime —
+        the ``feed / submit / advance / drain / close`` lifecycle handle."""
+        from ..serve.session import Session
+        return Session(self)
+
+    def step_until(self, t: float, *, max_events: int = 2_000_000) -> int:
+        """Deprecated spelling of ``advance(until=t, ...)``."""
+        warnings.warn("ClusterRuntime.step_until() is deprecated; use "
+                      "advance(until=t)", DeprecationWarning, stacklevel=2)
+        return self.advance(until=t, max_events=max_events, strict=True)
 
     def run(self, workload: Workload, *, failures=(), joins=(), resizes=(),
             horizon: float | None = None, max_events: int = 2_000_000
             ) -> Metrics:
         """Run to completion (or ``horizon``). ``failures``/``joins`` are
         ``(time, node)`` sequences; ``resizes`` are ``(time, node,
-        fraction)`` capacity changes."""
+        fraction)`` capacity changes.
+
+        Convenience composition of the session primitives: equivalent to
+        ``schedule_workload(...)`` followed by ``advance(until=horizon)``
+        / ``drain()``."""
         self.schedule_workload(workload, failures=failures, joins=joins,
                                resizes=resizes)
-        n_events = 0
-        while self._eq:
-            n_events += 1
-            if n_events > max_events:
-                raise RuntimeError(f"event budget exhausted ({max_events})")
-            ev = self._eq.pop()
-            if horizon is not None and ev.time > horizon:
-                break
-            self._now = ev.time
-            self._dispatch(ev)
+        if horizon is None:
+            return self.drain(max_events=max_events)
+        self.advance(until=horizon, max_events=max_events, strict=True)
         return self.metrics
 
 
 def run_policy(policy: str | Policy, workload: Workload, powers, *,
                failures=(), joins=(), resizes=(), **runtime_kwargs
                ) -> Metrics:
-    """Convenience: one policy, one workload, fresh runtime."""
+    """Deprecated convenience: one policy, one workload, fresh runtime.
+
+    Prefer ``repro.lab.run`` for declarative scenarios, or the session
+    API (``ClusterRuntime(...).open_session()``) for incremental use."""
+    warnings.warn("run_policy() is deprecated; use repro.lab.run() or the "
+                  "ClusterRuntime session API (open_session/submit/advance/"
+                  "drain)", DeprecationWarning, stacklevel=2)
     rt = ClusterRuntime(powers, policy, **runtime_kwargs)
     return rt.run(workload, failures=failures, joins=joins,
                   resizes=resizes)

@@ -131,15 +131,29 @@ class Engine:
         return finished
 
     def run(self, requests: list[GenRequest], max_steps: int = 10_000):
-        """Drive admissions + decoding until all requests finish."""
+        """Drive admissions + decoding until all requests finish.
+
+        A request can only be collected once: a request that finishes
+        during ``admit()`` (e.g. ``max_new_tokens=1``) frees its slot
+        immediately, so the same-iteration ``step()`` must not report it
+        again — the identity set makes single-counting structural rather
+        than an accident of slot bookkeeping."""
         pending = list(requests)
         done: list[GenRequest] = []
+        seen: set[int] = set()
+
+        def collect(batch):
+            for r in batch:
+                if r.done and id(r) not in seen:
+                    seen.add(id(r))
+                    done.append(r)
+
         for _ in range(max_steps):
             if pending and self.free_slots():
                 admitted = self.admit(pending)
                 pending = pending[len(admitted):]
-                done += [r for r in admitted if r.done]
-            done += self.step()
+                collect(admitted)
+            collect(self.step())
             if not pending and self.n_active == 0:
                 break
         return done

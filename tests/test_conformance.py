@@ -141,11 +141,11 @@ def _assert_conserved(seed: int) -> None:
                          resizes=resizes)
     # conservation must hold at ANY cut instant, not just at the end
     for cut in (5.0, 12.0, 21.0, 33.0):
-        rt.step_until(cut)
+        rt.advance(until=cut)
         c = rt.work_census(cut)
         assert c["conservation_gap"] <= 1e-6 * max(c["admitted"], 1.0), (
             f"work leaked mid-run at t={cut} (seed {seed}): {c}")
-    rt.step_until(1e9)  # drain
+    rt.advance(until=1e9)  # drain
     m = rt.metrics
     assert m.completed == m.arrived == trace.m, (seed, m.completed)
     end = rt.work_census()

@@ -306,11 +306,11 @@ def test_step_until_processes_in_time_order():
     wl = make_workload("poisson", horizon=20.0, seed=0, rate=2.0)
     rt = ClusterRuntime((3.0, 1.0, 7.0, 2.0), "jsq")
     rt.schedule_workload(wl)
-    rt.step_until(10.0)
+    rt.advance(until=10.0)
     mid = rt.metrics.arrived
     assert 0 < mid < wl.m
     assert (wl.t_arrive < 10.0).sum() == mid
-    rt.step_until(1e9)
+    rt.advance(until=1e9)
     assert rt.metrics.arrived == wl.m
     assert rt.metrics.completed == wl.m
     assert not rt.pending_work()
@@ -322,7 +322,7 @@ def test_withdraw_and_inject_conserve_tasks():
     src = ClusterRuntime((1.0,), "jsq", seed=0)
     dst = ClusterRuntime((5.0, 5.0), "jsq", seed=0)
     src.schedule_workload(wl)
-    src.step_until(5.0)
+    src.advance(until=5.0)
     queued = src.queued_tasks()
     assert queued, "the 1-power node must have a backlog"
     task = queued[-1]
@@ -330,9 +330,9 @@ def test_withdraw_and_inject_conserve_tasks():
     assert task.tid not in src.tasks
     with pytest.raises(ValueError, match="not queued"):
         src.withdraw(task)
-    dst.inject(task, 7.5)
-    dst.step_until(1e9)
-    src.step_until(1e9)
+    dst.submit(task, 7.5, arrival=False)
+    dst.advance(until=1e9)
+    src.advance(until=1e9)
     assert dst.tasks[task.tid].state == "done"
     assert task.t_finish is not None and task.t_finish >= 7.5
     # conservation: src arrived all, completed all but one; dst completed it
@@ -344,12 +344,12 @@ def test_withdraw_and_inject_conserve_tasks():
 def test_inject_rearms_trigger_for_idle_psts_member():
     dst = ClusterRuntime((2.0, 2.0), "psts", trigger_period=1.0,
                          policy_kwargs={"floor": 0.05})
-    dst.step_until(50.0)  # idle: the initial trigger chain has died out
+    dst.advance(until=50.0)  # idle: the initial trigger chain has died out
     from repro.runtime.runtime import Task
     for i in range(6):
-        dst.inject(Task(tid=1000 + i, t_arrive=60.0, work=30.0,
-                        packets=4.0), 60.0)
-    dst.step_until(1e9)
+        dst.submit(Task(tid=1000 + i, t_arrive=60.0, work=30.0,
+                        packets=4.0), 60.0, arrival=False)
+    dst.advance(until=1e9)
     assert dst.metrics.completed == 6
     assert dst.metrics.trigger_evals > 0, \
         "injection must revive the trigger chain"

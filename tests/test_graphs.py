@@ -164,13 +164,13 @@ def test_blocked_census_while_gated():
     dag = make_dag({"kind": "chain"}, 2, 0)
     rt = ClusterRuntime(np.array([1.0]), "round_robin")
     rt.schedule_workload(_trace(2, dag, work=4.0))
-    rt.step_until(1.0)  # parent running, child arrived but gated
+    rt.advance(until=1.0)  # parent running, child arrived but gated
     c = rt.census()
     assert c["blocked"] == 1 and c["running"] == 1
     wc = rt.work_census(1.0)
     assert wc["blocked"] == 4.0
     assert wc["conservation_gap"] < 1e-9
-    rt.step_until(100.0)
+    rt.advance(until=100.0)
     assert rt.census()["blocked"] == 0
     assert rt.metrics.completed == 2
 

@@ -257,7 +257,7 @@ def test_incremental_snapshot_matches_task_recount_under_churn():
     rt.schedule_workload(wl, failures=[(8.0, 0), (9.0, 3)],
                          joins=[(22.0, 0), (23.0, 3)])
     for t_cut in (5.0, 10.0, 20.0, 30.0, 200.0):
-        rt.step_until(t_cut)
+        rt.advance(until=t_cut)
         snap = rt.probe_snapshot(t_cut)
         # recount from live task state, the fallback path's definition
         expect = rt.loads(t_cut)

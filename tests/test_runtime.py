@@ -10,7 +10,6 @@ from repro.runtime import (
     Workload,
     make_policy,
     make_workload,
-    run_policy,
 )
 
 POWERS = np.array([3.0, 1.0, 7.0, 2.0, 5.0, 9.0, 4.0, 6.0])
@@ -20,6 +19,11 @@ def _bursty(seed=0, horizon=80.0):
     return make_workload("bursty", horizon=horizon, seed=seed,
                          rate_lo=0.5, rate_hi=10.0, sojourn_lo=15.0,
                          sojourn_hi=5.0, work_mean=5.0)
+
+
+def _run(policy, wl, powers, *, failures=(), joins=(), resizes=(), **kw):
+    rt = ClusterRuntime(powers, policy, **kw)
+    return rt.run(wl, failures=failures, joins=joins, resizes=resizes)
 
 
 # ---------------------------------------------------------------------------
@@ -80,8 +84,8 @@ def test_total_outage_then_rejoin(policy):
     after a rejoin — no crash, no loss, for every registered policy."""
     wl = Workload(t_arrive=np.array([0.0, 1.0]),
                   works=np.array([4.0, 4.0]), packets=np.ones(2))
-    m = run_policy(policy, wl, np.ones(2),
-                   failures=[(0.5, 0), (0.5, 1)], joins=[(3.0, 0)])
+    m = _run(policy, wl, np.ones(2),
+             failures=[(0.5, 0), (0.5, 1)], joins=[(3.0, 0)])
     assert m.completed == 2
     assert m.restarts >= 1
 
@@ -92,8 +96,8 @@ def test_arrival_during_total_outage_released_by_other_node(policy):
     it must be released when a DIFFERENT node rejoins."""
     wl = Workload(t_arrive=np.array([5.0]), works=np.array([4.0]),
                   packets=np.ones(1))
-    m = run_policy(policy, wl, np.ones(2),
-                   failures=[(1.0, 0), (1.0, 1)], joins=[(10.0, 1)])
+    m = _run(policy, wl, np.ones(2),
+             failures=[(1.0, 0), (1.0, 1)], joins=[(10.0, 1)])
     assert m.completed == 1
 
 
@@ -158,7 +162,7 @@ def test_load_aware_beats_random():
     wl = _bursty(seed=11, horizon=120.0)
     means = {}
     for pol in ["random", "jsq", "psts"]:
-        means[pol] = run_policy(pol, wl, POWERS, seed=3).mean_response
+        means[pol] = _run(pol, wl, POWERS, seed=3).mean_response
     assert means["jsq"] < means["random"]
     assert means["psts"] < means["random"]
 
@@ -172,17 +176,17 @@ def test_psts_beats_arrival_only_under_bursts():
                            rate_hi=18.0, sojourn_lo=25.0, sojourn_hi=6.0,
                            work_mean=6.0)
         powers = np.random.default_rng(0).integers(1, 10, 16).astype(float)
-        a = run_policy("arrival_only", wl, powers, seed=1).mean_response
-        p = run_policy("psts", wl, powers, seed=1, trigger_period=1.0,
-                       bandwidth=256.0,
-                       policy_kwargs={"floor": 0.05}).mean_response
+        a = _run("arrival_only", wl, powers, seed=1).mean_response
+        p = _run("psts", wl, powers, seed=1, trigger_period=1.0,
+                 bandwidth=256.0,
+                 policy_kwargs={"floor": 0.05}).mean_response
         deltas.append(a - p)
     assert np.mean(deltas) > 0, deltas
 
 
 def test_trigger_not_armed_for_static_policies():
     wl = _bursty(seed=4)
-    m = run_policy("jsq", wl, POWERS, trigger_period=1.0)
+    m = _run("jsq", wl, POWERS, trigger_period=1.0)
     assert m.trigger_evals == 0 and m.trigger_fires == 0
 
 

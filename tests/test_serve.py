@@ -89,6 +89,39 @@ def test_eos_stops_generation(toy):
     assert len(r.generated) == 1
 
 
+def test_admit_finished_requests_counted_once(toy):
+    """A request that finishes during admit() (max_new_tokens=1 is done
+    after the prefill token) frees its slot immediately; run() must report
+    it exactly once, not again via the same-iteration step()."""
+    cfg, lm, params = toy
+    rng = np.random.default_rng(4)
+    eng = Engine(lm, params, slots=2, max_len=32)
+    reqs = [GenRequest(i, rng.integers(0, cfg.vocab_size, size=4
+                                       ).astype(np.int32), max_new_tokens=1)
+            for i in range(5)]
+    done = eng.run(reqs)
+    assert sorted(r.rid for r in done) == list(range(5))
+    assert all(len(r.generated) == 1 for r in done)
+    assert eng.n_active == 0
+
+
+def test_admit_and_step_finishers_mixed(toy):
+    """Mixed batch: some requests finish at admit, others decode on —
+    every request reported once with its full generation."""
+    cfg, lm, params = toy
+    rng = np.random.default_rng(5)
+    eng = Engine(lm, params, slots=2, max_len=32)
+    lens = (1, 3, 1, 2)
+    reqs = [GenRequest(10 + i, rng.integers(0, cfg.vocab_size, size=4
+                                            ).astype(np.int32),
+                       max_new_tokens=n)
+            for i, n in enumerate(lens)]
+    done = eng.run(reqs)
+    assert sorted(r.rid for r in done) == [10, 11, 12, 13]
+    by_rid = {r.rid: r for r in done}
+    assert [len(by_rid[10 + i].generated) for i in range(4)] == list(lens)
+
+
 def test_multi_replica_routing(toy):
     cfg, lm, params = toy
     engines = [Engine(lm, params, slots=4, max_len=48) for _ in range(2)]
