@@ -19,6 +19,12 @@
   hooks in the event engine and the serving-tier schedulers
   (``ReplicaScheduler``, ``StragglerMonitor``): sub-millisecond means,
   asserted here and recorded as non-gating context numbers.
+* ``obs_scrape`` (PR 9) — metrics-registry + periodic-scrape twins on
+  the churn replay: records ``scrape_overhead_frac`` (gated <= 5%
+  absolute by ``compare.py``), writes the final OpenMetrics exposition
+  to ``obs-artifacts/scrape.txt`` (CI lints it with ``python -m
+  repro.obs.export``), and exports a stitched cross-member federation
+  trace to ``obs-artifacts/federation_trace.json``.
 """
 
 from __future__ import annotations
@@ -232,4 +238,94 @@ def obs_decision_latency() -> list[tuple[str, float, str]]:
     return rows
 
 
-ALL = [obs_timeline, obs_overhead, obs_decision_latency]
+def obs_scrape() -> list[tuple[str, float, str]]:
+    """Metrics registry + scrape cost, and the federation trace artifact.
+
+    The gated number (``scrape_overhead_frac``, absolute ceiling 5%)
+    compares the churn replay with the full PR 9 ops plane on — registry
+    collector as decision sink, plus a scrape every simulated 25 units
+    driven through the service API — against the uninstrumented twin.
+    The final scrape is written to ``obs-artifacts/scrape.txt`` and
+    parsed strictly before being declared an artifact.
+    """
+    from repro.federation import TopologySpec
+    from repro.obs import parse_openmetrics
+    from repro.serve import SchedulerService
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    rows = []
+    on_spec = _churn_scenario(lab.ObsSpec(trace=False, probe_every=25.0,
+                                          metrics=True))
+    off_spec = _churn_scenario(None)
+
+    def run_scraping(sc):
+        svc = SchedulerService.from_scenario(sc, log=None)
+        while svc.session.pending_sources:
+            svc.advance(until=svc.now + 25.0)
+            svc.scrape()
+        svc.drain()
+        return svc
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # fallback-duration census
+        frac, on_s, off_s = float("inf"), float("inf"), float("inf")
+        for i in range(2 * 3):  # interleaved best-of-3 per arm
+            arm = ("off", "on")[i % 2]
+            t0 = time.perf_counter()
+            svc = run_scraping(on_spec if arm == "on" else off_spec)
+            dt = time.perf_counter() - t0
+            if arm == "on":
+                on_s = min(on_s, dt)
+                final = svc
+            else:
+                off_s = min(off_s, dt)
+        frac = max((on_s - off_s) / off_s, 0.0)
+    text = final.scrape()
+    families = parse_openmetrics(text)  # strict: invalid scrape -> raise
+    completed = final.summary()["completed"]
+    assert families["sched_tasks_completed"]["samples"][0][2] \
+        == completed, "scrape counter diverged from Metrics.summary()"
+    with open(os.path.join(ARTIFACTS, "scrape.txt"), "w") as fh:
+        fh.write(text)
+    rows.append((
+        "obs/scrape/psts_churn", off_s * 1e6,
+        f"scrape_overhead_frac={frac:.4f};families={len(families)};"
+        f"enabled_s={on_s:.3f};disabled_s={off_s:.3f}"))
+
+    # stitched federation trace: two members exchanging over one WAN link
+    def member(i, rate):
+        return lab.Scenario(
+            name=f"fed-m{i}",
+            cluster=lab.ClusterSpec(n_nodes=4, power_seed=i,
+                                    bandwidth=256.0),
+            workload=lab.WorkloadSpec(process="poisson", horizon=60.0,
+                                      work_mean=6.0,
+                                      params={"rate": rate}),
+            policy=lab.PolicySpec("psts", trigger_period=1.0,
+                                  params={"floor": 0.05}),
+            obs=lab.ObsSpec(trace=True, probe_every=5.0),
+            seed=i)
+
+    fed = lab.Federation(
+        name="bench-fed-trace",
+        members=(member(0, 8.0), member(1, 1.0)),
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+    t0 = time.perf_counter()
+    r = lab.run(fed, backend="federated")
+    us = (time.perf_counter() - t0) * 1e6
+    stitched = r.extras["obs"]["stitched_trace"]
+    chains = sum(1 for ev in stitched["traceEvents"]
+                 if ev["name"] == "wan_handoff")
+    assert chains > 0, "federation produced no WAN hand-offs to stitch"
+    with open(os.path.join(ARTIFACTS, "federation_trace.json"), "w") as fh:
+        json.dump(stitched, fh, allow_nan=False)
+        fh.write("\n")
+    rows.append((
+        "obs/scrape/federation_trace", us,
+        f"members=2;handoffs={chains};"
+        f"events={len(stitched['traceEvents'])}"))
+    return rows
+
+
+ALL = [obs_timeline, obs_overhead, obs_decision_latency, obs_scrape]

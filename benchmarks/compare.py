@@ -39,6 +39,7 @@ LOWER_IS_BETTER = (
     "wasted_work",     # service burned by eviction/failure churn (PR 5)
     "cp_stretch",      # makespan over the DAG critical-path bound (PR 7)
     "dag_bytes_moved",
+    "steady_overhead",  # post-warmup fifo-dispatch cost vs plain (PR 9)
     "us_per_call",  # only with --include-timing
 )
 HIGHER_IS_BETTER = (
@@ -58,9 +59,27 @@ HIGHER_IS_BETTER = (
 ABS_CEILINGS = {
     "telemetry_overhead_frac": 0.05,  # obs enabled-vs-disabled delta (PR 6)
     "serve_p99_ms": 1.0,  # per-decision p99 through the service (PR 8)
+    "scrape_overhead_frac": 0.05,  # metrics registry + scrape delta (PR 9)
+}
+# wall-clock ratios whose *level* is machine-dependent (vectorized vs
+# event-loop wall time moves with the host's python/XLA speed balance, so
+# the same code scores 15x on one box and 23x on another): relative gating
+# across artifacts from different machines is noise. These (record-name
+# prefix, metric) pairs are exempt from relative gating and instead must
+# stay above an absolute floor — the structural claim (the fast path IS
+# an order of magnitude faster) holds on any machine.
+ABS_FLOORS = {
+    ("federation/fastpath", "speedup"): 5.0,
 }
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = 1e-9
+
+
+def _floor_for(name: str, metric: str):
+    for (name_prefix, m), floor in ABS_FLOORS.items():
+        if m == metric and name.startswith(name_prefix):
+            return floor
+    return None
 
 
 def _load(path: str) -> dict:
@@ -112,6 +131,8 @@ def compare(baseline: dict, fresh: dict, threshold: float,
             if sign == 0 or (metric == "us_per_call"
                              and not include_timing):
                 continue
+            if _floor_for(key[1], metric) is not None:
+                continue  # machine-dependent level: absolute floor below
             ov, nv = _as_number(ov), _as_number(nv)
             if ov is None or nv is None:
                 continue
@@ -139,6 +160,11 @@ def compare(baseline: dict, fresh: dict, threshold: float,
                     regressions.append(
                         f"EXCEEDED {key[0]}/{key[1]} {metric}: "
                         f"{value:g} > {ceiling:g} absolute ceiling")
+            floor = _floor_for(key[1], metric)
+            if floor is not None and value < floor:
+                regressions.append(
+                    f"BELOW    {key[0]}/{key[1]} {metric}: "
+                    f"{value:g} < {floor:g} absolute floor")
     new_only = sorted(set(fresh) - set(baseline))
     if new_only:
         notes.append(f"NEW      {len(new_only)} record(s) without baseline "

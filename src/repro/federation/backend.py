@@ -108,6 +108,11 @@ class FederatedBackend(Backend):
                             for ins in frt.instruments],
                 "wan_stream": frt.wan_stream,
             }
+            stitched = frt.stitched_trace()
+            if stitched is not None:
+                # one clock-aligned Chrome trace across every traced
+                # member; WAN hand-offs appear as a single causal chain
+                extras["obs"]["stitched_trace"] = stitched
         return RunResult(
             fingerprint=spec.fingerprint(), backend=self.name,
             backend_options={

@@ -100,6 +100,11 @@ class FederatedRuntime:
         # WAN stream on top samples federation-level state once per epoch
         self.instruments = [build_instruments(member.obs)
                             for member in federation.members]
+        # member-unique span-id spaces so a stitched trace never collides:
+        # instance k+1 rides in the high bits (0 stays "standalone")
+        for k, ins in enumerate(self.instruments):
+            if ins.tracer is not None:
+                ins.tracer.instance = k + 1
         self.wan_stream: list[dict] | None = (
             [] if any(ins.any for ins in self.instruments) else None)
         self._scheduled = 0
@@ -192,6 +197,7 @@ class FederatedRuntime:
                 rt.withdraw(task)
                 task.migrations += 1
                 t_land = t + delay
+                self._trace_handoff(task, src, dst, t, t_land)
                 self.runtimes[dst].submit(task, t_land, arrival=False)
                 self._wan_inflight.append((t_land, dst, task.work))
                 self._sent[task.tid] = task.work
@@ -201,6 +207,52 @@ class FederatedRuntime:
                 loads[src] -= task.work
                 loads[dst] += task.work
                 surplus -= task.work
+
+    def _trace_handoff(self, task, src: int, dst: int, t: float,
+                       t_land: float) -> None:
+        """Record the causal chain of one WAN hand-off.
+
+        ``trace_id`` is the task id (stable across members); span ids are
+        allocated from the member-unique tracers. A first hand-off roots
+        the chain with a ``wan_resident`` span covering the task's time at
+        the source; every hop adds a ``wan_handoff`` span whose parent is
+        the previous link; the destination engine continues the chain on
+        landing (``land`` instant) and closes it with the task span. The
+        context rides on ``task.trace_ctx`` so relays compose."""
+        src_tr = self.instruments[src].tracer
+        dst_tr = self.instruments[dst].tracer
+        if src_tr is None and dst_tr is None:
+            return
+        trace_id = task.tid
+        parent = task.trace_ctx[1] if task.trace_ctx is not None else -1
+        if src_tr is not None:
+            if parent < 0:
+                parent = src_tr.next_span_id()
+                src_tr.span("wan_resident", task.t_arrive, t, tid=task.tid,
+                            cat="wan",
+                            args={"trace_id": trace_id, "span_id": parent,
+                                  "member": src})
+            sid = src_tr.next_span_id()
+            src_tr.span("wan_handoff", t, t_land, tid=task.tid, cat="wan",
+                        args={"trace_id": trace_id, "span_id": sid,
+                              "parent_id": parent, "src": src, "dst": dst})
+            parent = sid
+        task.trace_ctx = (trace_id, parent)
+
+    def stitched_trace(self) -> dict | None:
+        """One clock-aligned Chrome trace over every traced member (member
+        k's process lanes land at pid ``k*16 + pid``); ``None`` when no
+        member traces. Simulated clocks are already shared (lockstep
+        epochs), so no offsets apply."""
+        traces, names = [], []
+        for k, ins in enumerate(self.instruments):
+            if ins.tracer is not None:
+                traces.append(ins.tracer.to_chrome_trace())
+                names.append(f"m{k}")
+        if not traces:
+            return None
+        from ..obs import merge_chrome_traces
+        return merge_chrome_traces(traces, names)
 
     def _sample_wan(self, t: float) -> None:
         """One federation-level telemetry sample at epoch boundary ``t``:

@@ -233,12 +233,21 @@ def _serve_cmd(args, scenario) -> int:
     """Run a scenario as an online scheduling service: decisions stream
     out as JSONL while tasks stream in (scenario workload and/or a JSONL
     feed), the final metrics land on stderr / ``--out``."""
+    from ..obs import MetricsHTTPServer, attach_collector, write_metrics_jsonl
     from ..serve import DecisionLog, JsonlSource, SchedulerService
     if getattr(scenario, "is_federation", False):
         raise SystemExit("serve drives a single Scenario; run a Federation "
                          "on the federated backend")
+    if args.metrics_every is not None and args.metrics_every <= 0:
+        raise SystemExit(f"--metrics-every must be > 0, "
+                         f"got {args.metrics_every}")
+    metrics_every = args.metrics_every
+    if args.metrics_out and metrics_every is None:
+        metrics_every = 5.0
     sink = (open(args.decisions_out, "w") if args.decisions_out
             else sys.stdout)
+    metrics_fh = open(args.metrics_out, "w") if args.metrics_out else None
+    server = None
     try:
         log = DecisionLog(
             keep=False,
@@ -247,14 +256,38 @@ def _serve_cmd(args, scenario) -> int:
             scenario, attach_workload=not args.no_workload, log=log)
         if args.feed:
             svc.attach(JsonlSource(args.feed))
-        if args.step is not None:
-            if args.step <= 0:
-                raise SystemExit(f"--step must be > 0, got {args.step}")
+        if args.metrics_port is not None:
+            server = MetricsHTTPServer(svc.scrape, port=args.metrics_port)
+            print(f"metrics endpoint: {server.url}", file=sys.stderr)
+        if args.step is not None and args.step <= 0:
+            raise SystemExit(f"--step must be > 0, got {args.step}")
+        # pace micro-steps on the finer of --step and --metrics-every so
+        # the JSONL stream samples on its cadence even without --step
+        pace = args.step
+        if metrics_every is not None:
+            pace = metrics_every if pace is None else min(pace,
+                                                          metrics_every)
+        collector = attach_collector(svc.rt) if metrics_fh else None
+        next_mx = metrics_every if metrics_every is not None else None
+        if pace is not None:
             while svc.session.pending_sources:
-                svc.advance(until=svc.now + args.step)
+                svc.advance(until=svc.now + pace)
+                if metrics_fh is not None and svc.now >= next_mx:
+                    collector.refresh()
+                    write_metrics_jsonl(metrics_fh, svc.now,
+                                        collector.registry)
+                    next_mx += metrics_every
         svc.drain()
+        if metrics_fh is not None:
+            # final sample: the drained end state
+            collector.refresh()
+            write_metrics_jsonl(metrics_fh, svc.now, collector.registry)
         svc.close()
     finally:
+        if server is not None:
+            server.close()
+        if metrics_fh is not None:
+            metrics_fh.close()
         if sink is not sys.stdout:
             sink.close()
     summary = svc.summary()
@@ -334,6 +367,18 @@ def main(argv: list[str] | None = None) -> int:
     p_srv.add_argument("--out", default=None,
                        help="write final metrics + decision counts JSON "
                             "here")
+    p_srv.add_argument("--metrics-out", default=None, metavar="FILE",
+                       help="stream registry snapshots here as JSONL, one "
+                            "record per --metrics-every of sim time")
+    p_srv.add_argument("--metrics-every", type=float, default=None,
+                       metavar="SECONDS",
+                       help="metrics stream cadence in sim time units "
+                            "(default 5.0 when --metrics-out is set)")
+    p_srv.add_argument("--metrics-port", type=int, default=None,
+                       metavar="PORT",
+                       help="serve a live Prometheus/OpenMetrics scrape "
+                            "endpoint on this port while the service runs "
+                            "(0 picks a free port; URL prints on stderr)")
 
     from ..traces import TRACE_FORMATS
     p_tr = sub.add_parser(

@@ -500,11 +500,30 @@ class ObsSpec(_SpecBase):
     events. Telemetry never changes what the experiment *is*: ``obs`` is
     excluded from :meth:`Scenario.fingerprint`, and the conformance tests
     assert it changes no metric.
+
+    The PR 9 ops plane rides the same spec: ``metrics`` installs a
+    :class:`repro.obs.RegistryCollector` as the engine's decision sink
+    and exposes a scrapeable :class:`repro.obs.MetricsRegistry`
+    (``extras["obs"]["metrics"]``, ``Session.scrape()``); ``anomaly``
+    runs :class:`repro.obs.AnomalyMonitor` on the probe chain (requires
+    ``probe_every``) with optional ``anomaly_params`` forwarded to its
+    constructor; alerts land in ``extras["obs"]["alerts"]``.
+
+    ``latency_sample`` is the placement-latency sampling stride: the
+    engine times 1-in-``latency_sample`` placements (deterministically)
+    and records each sample with that weight, so ``decision_stats()``
+    reports the full decision count and percentiles ranked against it.
+    ``1`` means a census — every placement timed; the default ``8``
+    keeps timing overhead off the hot path.
     """
 
     trace: bool = True
     probe_every: float | None = None
     ring: int | None = None
+    metrics: bool = False
+    anomaly: bool = False
+    anomaly_params: dict | None = None
+    latency_sample: int = 8
 
     def __post_init__(self):
         if self.probe_every is not None and not self.probe_every > 0:
@@ -512,6 +531,15 @@ class ObsSpec(_SpecBase):
                 f"probe_every must be > 0, got {self.probe_every}")
         if self.ring is not None and self.ring <= 0:
             raise ValueError(f"ring must be > 0, got {self.ring}")
+        if self.latency_sample < 1:
+            raise ValueError(
+                f"latency_sample must be >= 1, got {self.latency_sample}")
+        if self.anomaly and self.probe_every is None:
+            raise ValueError(
+                "anomaly detection rides the probe chain; set probe_every")
+        if self.anomaly_params is not None:
+            object.__setattr__(self, "anomaly_params",
+                               _frozen_params(self.anomaly_params))
 
 
 def resolve_fault_schedule(scenario) -> tuple[tuple, tuple, tuple]:

@@ -14,13 +14,44 @@ probe carry-outs away when the static flag is off):
   online against the sampled imbalance signal and keeps structured
   trigger/skip events.
 
+The PR 9 ops plane adds the scrapeable surface on top:
+
+- :class:`MetricsRegistry` + :class:`RegistryCollector` — label-aware
+  Counter/Gauge/Histogram families with O(1) updates, fed by the decision
+  sink and refreshed from engine state at scrape time;
+- ``to_openmetrics`` / ``parse_openmetrics`` — Prometheus/OpenMetrics
+  text exposition and its strict round-trip parser (the CI lint);
+- :class:`AnomalyMonitor` — EWMA+MAD detectors (queue growth, imbalance
+  drift toward the critical bound, trigger storms) on the probe chain;
+- ``merge_chrome_traces`` — stitched, clock-aligned federation traces
+  (span ``trace_id``/``span_id``/``parent_id`` ride in event args).
+
 ``build_instruments`` / ``export_obs`` are the glue the lab backends and
 ``FederatedRuntime`` use to turn an ``ObsSpec`` into live instruments and
 back into ``RunResult.extras["obs"]``.
 """
 
+from .anomaly import AnomalyMonitor, EwmaMad
+from .export import (
+    MetricsHTTPServer,
+    merge_chrome_traces,
+    parse_openmetrics,
+    to_openmetrics,
+    write_metrics_jsonl,
+)
 from .monitor import CriticalPointMonitor
 from .probe import ProbeSeries, imbalance_by_level
+from .registry import (
+    Counter,
+    FanoutSink,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RegistryCollector,
+    attach_collector,
+    log_buckets,
+    merge_registries,
+)
 from .tracer import (
     NULL_TRACER,
     PID_NODES,
@@ -44,4 +75,20 @@ __all__ = [
     "Instruments",
     "build_instruments",
     "export_obs",
+    "MetricsRegistry",
+    "RegistryCollector",
+    "FanoutSink",
+    "attach_collector",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "log_buckets",
+    "merge_registries",
+    "to_openmetrics",
+    "parse_openmetrics",
+    "merge_chrome_traces",
+    "MetricsHTTPServer",
+    "write_metrics_jsonl",
+    "AnomalyMonitor",
+    "EwmaMad",
 ]

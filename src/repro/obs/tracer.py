@@ -22,11 +22,28 @@ same stride-8 records, and each ``extend`` of a full record evicts
 exactly the oldest event; ``n_dropped`` counts what fell off. Open spans
 (``begin``/``end``) are tracked outside the ring so a span whose begin
 predates the ring window still closes correctly.
+
+Causal ids: :meth:`next_span_id` allocates ids unique across a
+federation (the member index rides in the high bits via ``instance``),
+and callers attach ``trace_id`` / ``span_id`` / ``parent_id`` through
+the ordinary ``args`` dict — only spans that participate in a causal
+chain (WAN hand-offs and the lifecycle spans of handed-off tasks) pay
+for ids, so the hot path stays id-free.
+
+Decision latencies are sampled (the engine times placements 1-in-
+``latency_sample``; see ``ObsSpec.latency_sample``) but counted in
+full: each recorded sample carries the ``weight`` of the unsampled
+decisions it represents, so ``decision_stats()`` reports the true
+decision count ``n`` and percentiles ranked against it — under the
+deterministic stride the reservoir's order statistics estimate the
+population's, while a naive p99 of the sampled stream would claim a
+census it never took.
 """
 
 from __future__ import annotations
 
 import json
+import math
 from collections import deque
 
 __all__ = ["Tracer", "NullTracer", "NULL_TRACER", "PID_NODES", "PID_TASKS",
@@ -50,15 +67,31 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, *, ring: int | None = None):
+    def __init__(self, *, ring: int | None = None, instance: int = 0,
+                 latency_sample: int = 8):
         if ring is not None and ring <= 0:
             raise ValueError("ring must be positive or None")
+        if latency_sample < 1:
+            raise ValueError("latency_sample must be >= 1")
         self.ring = ring
         self._events: deque | list
         self._events = deque(maxlen=8 * ring) if ring is not None else []
         self._total = 0
         self._open: dict[tuple, tuple[float, dict]] = {}
         self._latency: dict[str, list[float]] = {}
+        self._lat_n: dict[str, int] = {}
+        #: placement-latency sampling stride the engine reads at
+        #: construction (1 = census); see ``ObsSpec.latency_sample``
+        self.latency_sample = int(latency_sample)
+        #: federation member tag folded into span ids (0 = standalone)
+        self.instance = int(instance)
+        self._next_sid = 0
+
+    def next_span_id(self) -> int:
+        """Allocate a span id unique across federation members: the
+        tracer's ``instance`` in the high bits, a local counter below."""
+        self._next_sid += 1
+        return (self.instance << 32) | self._next_sid
 
     # -- raw event plumbing --------------------------------------------
     # flat stride-8 records: ph, name, t0, dur, pid, tid, cat, args|None
@@ -114,30 +147,48 @@ class Tracer:
                              dict(values)))
         self._total += 1
 
-    def decision(self, kind: str, latency_s: float, **args) -> None:
+    def decision(self, kind: str, latency_s: float,
+                 weight: int = 1, **args) -> None:
         """Record one scheduler decision's wall-clock latency.
 
-        Stats-only by design: a per-decision trace event would double the
-        hot-path cost for information ``decision_stats()`` already carries
-        (extra ``args`` are accepted and ignored for the same reason).
+        ``weight`` is how many decisions this sample stands for (the
+        engine's placement stride); the reservoir keeps the sample, the
+        count keeps the full population. Stats-only by design: a
+        per-decision trace event would double the hot-path cost for
+        information ``decision_stats()`` already carries (extra ``args``
+        are accepted and ignored for the same reason).
         """
         lats = self._latency.get(kind)
         if lats is None:
             lats = self._latency[kind] = []
+            self._lat_n[kind] = 0
         lats.append(latency_s)
+        self._lat_n[kind] += weight
 
     # -- summaries ------------------------------------------------------
     def decision_stats(self) -> dict:
-        """Per-decision-kind latency stats in microseconds."""
+        """Per-decision-kind latency stats in microseconds.
+
+        ``n`` is the *full* decision count (sampled-out decisions
+        included via their sample's weight); ``sampled`` is the reservoir
+        size. Percentiles are nearest-rank over the reservoir — under the
+        engine's deterministic stride every sample represents the same
+        number of decisions, so reservoir rank ``q`` estimates population
+        rank ``q``.
+        """
         out = {}
         for kind, lats in self._latency.items():
             xs = sorted(lats)
-            n = len(xs)
-            p99 = xs[min(n - 1, max(0, int(0.99 * n) - 0))] if n else 0.0
+            s = len(xs)
+
+            def rank(q, s=s, xs=xs):
+                return xs[min(s - 1, max(0, math.ceil(q * s) - 1))]
             out[kind] = {
-                "n": n,
-                "mean_us": sum(xs) / n * 1e6,
-                "p99_us": p99 * 1e6,
+                "n": self._lat_n[kind],
+                "sampled": s,
+                "mean_us": sum(xs) / s * 1e6,
+                "p99_us": rank(0.99) * 1e6,
+                "p999_us": rank(0.999) * 1e6,
                 "max_us": xs[-1] * 1e6,
             }
         return out
@@ -194,6 +245,11 @@ class NullTracer:
     ring = None
     n_events = 0
     n_dropped = 0
+    instance = 0
+    latency_sample = 8
+
+    def next_span_id(self):
+        return 0
 
     def instant(self, *a, **k):
         pass

@@ -103,6 +103,11 @@ class Task:
     output_node: int = -1
     # (time, node) history of every placement decision, for invariant checks
     placements: list[tuple[float, int]] = field(default_factory=list)
+    # causal trace context (PR 9): ``(trace_id, parent_span_id)`` set when
+    # the task crosses a WAN link, so the destination cluster's tracer
+    # stitches its spans to the source's. None for tasks that never
+    # handed off — the hot path stays id-free.
+    trace_ctx: tuple | None = None
 
     @property
     def state(self) -> str:
@@ -145,7 +150,7 @@ class ClusterRuntime:
                  node_attrs: dict | None = None,
                  constraint_blind: bool = False,
                  tracer=None, probe=None, trigger_monitor=None,
-                 decision_sink=None):
+                 decision_sink=None, anomaly=None):
         powers = np.asarray(powers, dtype=np.float64)
         self._base_powers = powers.copy()   # nominal, never mutated
         self._powers_full = powers.copy()   # current (resize-adjusted)
@@ -205,8 +210,19 @@ class ClusterRuntime:
         # online decision feed (repro.serve): an object with place/migrate/
         # evict/trigger/complete methods, called as decisions happen. Like
         # the tracer it guards on `is not None` and reads engine state only
-        # — enabling it changes no Metrics.summary() value
+        # — enabling it changes no Metrics.summary() value. Sink calls are
+        # exception-guarded (_sink_emit): a flaky consumer must not corrupt
+        # engine state mid-event, so failures are counted, not raised.
         self._sink = decision_sink
+        self.sink_errors = 0
+        if decision_sink is not None and hasattr(decision_sink, "bind"):
+            decision_sink.bind(self)
+        # online anomaly detection (repro.obs.anomaly): rides the probe
+        # chain; alerts flow out through the decision sink's `alert` hook
+        self._anom = anomaly
+        if anomaly is not None and probe is None:
+            raise ValueError("anomaly detection rides the probe chain; "
+                             "pass probe= as well")
         # probe fast path: queued work per node / per tier maintained
         # incrementally at every queue mutation, so a probe sample is
         # O(nodes) instead of O(queued tasks). Only kept while probes are
@@ -215,7 +231,26 @@ class ClusterRuntime:
         self._track = probe is not None
         self._queued_work = [0.0] * self.grid.capacity
         self._queued_tier: dict[int, float] = {}
-        self._dec_count = 0  # placement-latency sampling clock (1-in-8)
+        # placement-latency sampling clock; the stride comes from the
+        # tracer (ObsSpec.latency_sample, default 1-in-8)
+        self._dec_count = 0
+        self._lat_every = (int(getattr(tracer, "latency_sample", 8) or 8)
+                           if tracer is not None else 8)
+
+    # -- decision-sink guard ------------------------------------------------
+    def _sink_emit(self, method: str, *args) -> None:
+        """Deliver one decision-sink callback, absorbing consumer faults:
+        a sink that raises must not corrupt engine state mid-event, so the
+        failure is counted (``sink_errors``, surfaced in the metrics
+        registry) and the event handler keeps advancing. Methods the sink
+        does not implement (e.g. ``alert`` on an older sink) are skipped."""
+        fn = getattr(self._sink, method, None)
+        if fn is None:
+            return
+        try:
+            fn(*args)
+        except Exception:
+            self.sink_errors += 1
 
     # -- state inspection ---------------------------------------------------
     def _progress(self, task: Task, node: int, t: float) -> float:
@@ -351,12 +386,15 @@ class ClusterRuntime:
         fmask = task.feasible
         view_mask = None if (fmask is None or self.constraint_blind) \
             else fmask
-        # placement latency is sampled 1-in-8 (deterministically): the
-        # clock-read + record pair costs a sizeable fraction of a cheap
-        # placement, and per-decision stats only need a representative
-        # sample, not a census. Trigger/rebalance decisions are orders of
-        # magnitude rarer and stay fully timed.
-        _timed = self._tr is not None and (self._dec_count & 7) == 0
+        # placement latency is sampled 1-in-latency_sample
+        # (deterministically): the clock-read + record pair costs a
+        # sizeable fraction of a cheap placement, and per-decision stats
+        # only need a representative sample, not a census — the recorded
+        # sample carries the stride as its weight, so decision_stats()
+        # still reports the full count. Trigger/rebalance decisions are
+        # orders of magnitude rarer and stay fully timed.
+        _timed = (self._tr is not None
+                  and self._dec_count % self._lat_every == 0)
         if self._tr is not None:
             self._dec_count += 1
         _t0 = time.perf_counter() if _timed else 0.0
@@ -373,7 +411,8 @@ class ClusterRuntime:
         except ValueError:  # e.g. positional rule with zero active power
             node = -1
         if _timed:
-            self._tr.decision("place", time.perf_counter() - _t0)
+            self._tr.decision("place", time.perf_counter() - _t0,
+                              weight=self._lat_every)
         ok = (0 <= node < self.grid.capacity and self.grid.active[node]
               and (fmask is None or fmask[node]))
         if not ok:
@@ -401,7 +440,7 @@ class ClusterRuntime:
         # already in the trace (service span carries the node, evict/
         # migrate/fail events mark every re-placement cause)
         if self._sink is not None:
-            self._sink.place(t, task, node)
+            self._sink_emit("place", t, task, node)
         self._enqueue(node, task)
         self._try_start(node, t)
 
@@ -539,7 +578,7 @@ class ClusterRuntime:
                                   cat="migrate",
                                   args={"src": task.node, "dst": dst})
                 if self._sink is not None:
-                    self._sink.migrate(t, task, task.node, dst)
+                    self._sink_emit("migrate", t, task, task.node, dst)
                 self._queues[task.node].remove(task)
                 if self._track:
                     self._unqueue(task.node, task)
@@ -587,7 +626,7 @@ class ClusterRuntime:
             wait=t_started - task.t_arrive,
             t_finish=t, tier=task.priority, work=task.work)
         if self._sink is not None:
-            self._sink.complete(t, task, node)
+            self._sink_emit("complete", t, task, node)
         if self._tr is not None:
             # the completed attempt's service span carries no args dict
             # (an args-free record leaves nothing GC-tracked behind); the
@@ -596,13 +635,19 @@ class ClusterRuntime:
             # ``_interrupt``, so its absence here is unambiguous
             self._tr.span("service", t_started, t, tid=task.tid,
                           cat="service")
+            args = {"work": task.work, "tier": task.priority,
+                    "node": node,
+                    "migrations": task.migrations,
+                    "evictions": task.evictions,
+                    "restarts": task.restarts}
+            if task.trace_ctx is not None:
+                # handed-off task: close its causal chain — the task span
+                # is the child of the last WAN hop it rode in on
+                args["trace_id"] = task.trace_ctx[0]
+                args["span_id"] = self._tr.next_span_id()
+                args["parent_id"] = task.trace_ctx[1]
             self._tr.span("task", task.t_arrive, t, tid=task.tid,
-                          cat="lifecycle",
-                          args={"work": task.work, "tier": task.priority,
-                                "node": node,
-                                "migrations": task.migrations,
-                                "evictions": task.evictions,
-                                "restarts": task.restarts})
+                          cat="lifecycle", args=args)
         if task.has_children:
             task.output_node = node
             self._release_children(task.tid, t)
@@ -642,7 +687,7 @@ class ClusterRuntime:
                              args={"running": task.t_start is not None})
         if self._sink is not None and (task.t_start is not None
                                        or task.node >= 0):
-            self._sink.evict(t, task, task.t_start is not None)
+            self._sink_emit("evict", t, task, task.t_start is not None)
         if task.t_start is not None:  # running: the attempt is lost
             node = task.node
             self._interrupt(task, node, t)
@@ -700,7 +745,16 @@ class ClusterRuntime:
             # an injected hand-off from another cluster (local migrations
             # record their full span at departure — the flight time is
             # deterministic, so there is nothing left to learn on arrival)
-            self._tr.instant("land", t, tid=task.tid, cat="migrate")
+            if task.trace_ctx is not None:
+                trace_id, parent = task.trace_ctx
+                sid = self._tr.next_span_id()
+                self._tr.instant("land", t, tid=task.tid, cat="migrate",
+                                 args={"trace_id": trace_id,
+                                       "span_id": sid,
+                                       "parent_id": parent})
+                task.trace_ctx = (trace_id, sid)
+            else:
+                self._tr.instant("land", t, tid=task.tid, cat="migrate")
         if dst < 0 or not self.grid.active[dst]:
             # dst < 0: an injected federation hand-off, placed by the local
             # policy on landing; otherwise the destination died in flight
@@ -761,7 +815,12 @@ class ClusterRuntime:
             if dec is not None:
                 self.metrics.trigger_evals += 1
                 if self._sink is not None:
-                    self._sink.trigger(t, bool(dec.trigger))
+                    self._sink_emit("trigger", t, bool(dec.trigger))
+                if self._anom is not None:
+                    for rec in self._anom.observe_trigger(
+                            t, bool(dec.trigger)):
+                        if self._sink is not None:
+                            self._sink_emit("alert", t, rec)
                 if self._mon is not None:
                     self._mon.record(
                         t, dec, floor=float(getattr(self.policy, "floor",
@@ -790,6 +849,10 @@ class ClusterRuntime:
         """Sample the probe series and re-arm on its cadence; purely
         observational, mirrors the trigger chain's arming rules."""
         self._probe.observe(self, t)
+        if self._anom is not None:
+            for rec in self._anom.observe(self, t):
+                if self._sink is not None:
+                    self._sink_emit("alert", t, rec)
         if self._outstanding() or self._eq.pending(
                 EventKind.ARRIVAL, EventKind.MIGRATION_ARRIVE,
                 EventKind.COMPLETION):

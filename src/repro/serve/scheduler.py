@@ -107,6 +107,12 @@ class DecisionLog:
         self._emit(Decision(self.seq, t, "trigger",
                             info={"fired": bool(fired)}))
 
+    def alert(self, t, record) -> None:
+        """Anomaly alerts ride the same stream as decisions (kind
+        ``alert``, detector and detail in ``info``)."""
+        self.counts.setdefault("alert", 0)
+        self._emit(Decision(self.seq, t, "alert", info=dict(record)))
+
     # -- consumption ---------------------------------------------------------
     def __len__(self) -> int:
         return len(self.decisions)
@@ -140,10 +146,18 @@ class SchedulerService:
 
     def __init__(self, runtime: ClusterRuntime, *, log: DecisionLog | None
                  = None):
+        from ..obs import FanoutSink
         self.rt = runtime
         self.log = DecisionLog() if log is None else log
-        if runtime._sink is None:
+        # install the log *alongside* any sink already wired in (e.g. the
+        # RegistryCollector an ObsSpec(metrics=True) lowering installed)
+        existing = runtime._sink
+        if existing is None:
             runtime._sink = self.log
+        elif isinstance(existing, FanoutSink):
+            existing.sinks.append(self.log)
+        else:
+            runtime._sink = FanoutSink([existing, self.log])
         self.session = Session(runtime)
         self.instruments = None
 
@@ -211,6 +225,11 @@ class SchedulerService:
 
     def summary(self) -> dict:
         return self.rt.metrics.summary()
+
+    def scrape(self) -> str:
+        """OpenMetrics exposition of the live engine (see
+        :meth:`Session.scrape`)."""
+        return self.session.scrape()
 
     def __enter__(self):
         return self

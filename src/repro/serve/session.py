@@ -127,6 +127,17 @@ class Session:
                  if getattr(s, "next_time", None) is not None]
         return min(times) if times else None
 
+    # -- observability -------------------------------------------------------
+    def scrape(self) -> str:
+        """Prometheus/OpenMetrics exposition of the runtime's current
+        state. Get-or-creates a :class:`repro.obs.RegistryCollector` on
+        the runtime (reusing one installed by ``ObsSpec(metrics=True)``),
+        refreshes its gauges from live engine state, and renders the
+        text format. First call on an uninstrumented runtime starts the
+        streaming counters from that moment."""
+        from ..obs import attach_collector
+        return attach_collector(self.rt).scrape()
+
     # -- lifecycle -----------------------------------------------------------
     @property
     def metrics(self):

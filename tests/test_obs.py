@@ -197,8 +197,11 @@ def test_engine_decision_latency_recorded_sub_ms():
     for kind in ("place", "trigger"):
         assert stats[kind]["n"] > 0
         assert stats[kind]["mean_us"] < 1000.0
-    # placement latency is sampled 1-in-8, not a census
-    assert stats["place"]["n"] < obs["trace_events"]
+    # placement latency is sampled 1-in-8 but counted in full: the
+    # reservoir is smaller than the reported decision count
+    assert stats["place"]["sampled"] < stats["place"]["n"]
+    assert stats["place"]["n"] == stats["place"]["sampled"] * 8
+    assert stats["place"]["p999_us"] >= stats["place"]["p99_us"]
 
 
 def test_ring_mode_through_the_lab():

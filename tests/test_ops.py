@@ -1,0 +1,596 @@
+"""Ops plane (ISSUE 9 tentpole): metrics registry + OpenMetrics
+exposition, federation-wide causal tracing, online anomaly detection,
+weighted decision-latency sampling, and the hardened decision sink."""
+
+import json
+import math
+import urllib.request
+
+import pytest
+
+from repro import lab
+from repro.federation import TopologySpec
+from repro.lab.cli import main as lab_cli
+from repro.obs import (
+    AnomalyMonitor,
+    Counter,
+    EwmaMad,
+    FanoutSink,
+    Gauge,
+    Histogram,
+    MetricsHTTPServer,
+    MetricsRegistry,
+    RegistryCollector,
+    Tracer,
+    attach_collector,
+    log_buckets,
+    merge_chrome_traces,
+    merge_registries,
+    parse_openmetrics,
+    to_openmetrics,
+)
+from repro.obs.export import main as lint_cli
+from repro.runtime import ClusterRuntime, make_workload
+from repro.serve import SchedulerService
+
+
+def _scenario(obs=None, *, rate=3.0, horizon=30.0, n=8, period=1.0):
+    return lab.Scenario(
+        name="ops-test",
+        cluster=lab.ClusterSpec(n_nodes=n, power_seed=3),
+        workload=lab.WorkloadSpec(process="poisson", horizon=horizon,
+                                  work_mean=5.0, params={"rate": rate}),
+        policy=lab.PolicySpec("psts", trigger_period=period,
+                              params={"floor": 0.05}),
+        obs=obs)
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+def test_log_buckets_spacing_and_validation():
+    b = log_buckets(1e-2, 1e1, per_decade=3)
+    assert b[0] == pytest.approx(1e-2)
+    assert all(hi > lo for lo, hi in zip(b, b[1:]))
+    # ~3 bounds per decade over 3 decades
+    assert 9 <= len(b) <= 11
+    for lo, hi in ((0.0, 1.0), (1.0, 1.0), (2.0, 1.0)):
+        with pytest.raises(ValueError):
+            log_buckets(lo, hi)
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 10.0, per_decade=0)
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests", labels=("kind",))
+    c.inc(kind="a")
+    c.inc(2.0, kind="a")
+    c.inc(kind="b")
+    assert c.get(kind="a") == 3.0
+    assert reg.value("req_total", kind="b") == 1.0
+    g = reg.gauge("depth")
+    g.set(7.0)
+    g.inc(-2.0)
+    assert g.get() == 5.0
+    h = reg.histogram("lat", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    child = h.labels() if h.label_names else h._default
+    assert child.total == 4
+    assert child.sum == pytest.approx(555.5)
+    # cumulative counts are monotone and end at the total
+    cum = h.cumulative(child)
+    assert cum == sorted(cum)
+    assert cum[-1] == 4
+    # boundary lands in the <= bucket (Prometheus le semantics)
+    h2 = reg.histogram("edge", buckets=(1.0, 2.0))
+    h2.observe(1.0)
+    assert h2._default.counts[0] == 1
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total")
+    assert reg.counter("x_total") is a
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError, match="increasing"):
+        Histogram("bad", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError, match="bucket"):
+        Histogram("empty", buckets=())
+    fam = Counter("y_total", labels=("k",))
+    with pytest.raises(ValueError, match="expected labels"):
+        fam.labels(wrong="v")
+
+
+def test_merge_registries_tags_members_and_sums_histograms():
+    regs = []
+    for k in range(2):
+        reg = MetricsRegistry()
+        reg.counter("done_total").inc(10 * (k + 1))
+        h = reg.histogram("wait", buckets=(1.0, 10.0))
+        h.observe(0.5)
+        h.observe(5.0 * (k + 1))
+        regs.append(reg)
+    merged = merge_registries(regs, "member", ["m0", "m1"])
+    assert merged.value("done_total", member="m0") == 10.0
+    assert merged.value("done_total", member="m1") == 20.0
+    # the merged exposition still parses with the member label attached
+    fams = parse_openmetrics(to_openmetrics(merged))
+    names = {lbl["member"] for _, lbl, _ in fams["done"]["samples"]}
+    assert names == {"m0", "m1"}
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics exposition + strict parser
+# ---------------------------------------------------------------------------
+
+def _sample_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.counter("jobs_total", "jobs", labels=("kind",)).inc(3, kind="a")
+    reg.gauge("load", "cluster load").set(1.5)
+    h = reg.histogram("resp", "response", labels=("tier",),
+                      buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v, tier="0")
+    return reg
+
+
+def test_openmetrics_round_trip():
+    reg = _sample_registry()
+    text = to_openmetrics(reg)
+    assert text.endswith("# EOF\n")
+    fams = parse_openmetrics(text)
+    assert fams["jobs"]["type"] == "counter"
+    assert fams["jobs"]["samples"] == [("jobs_total", {"kind": "a"}, 3.0)]
+    assert fams["load"]["samples"] == [("load", {}, 1.5)]
+    buckets = [(lbl["le"], v) for name, lbl, v in fams["resp"]["samples"]
+               if name == "resp_bucket"]
+    assert [v for _, v in buckets] == [1.0, 2.0, 3.0, 4.0]
+    assert buckets[-1][0] == "+Inf"
+    count = [v for name, _, v in fams["resp"]["samples"]
+             if name == "resp_count"]
+    assert count == [4.0]
+
+
+def test_openmetrics_parser_rejects_malformed_input():
+    bad = {
+        "no EOF": "# TYPE a gauge\na 1\n",
+        "after EOF": "# TYPE a gauge\na 1\n# EOF\nb 2\n",
+        "blank line": "# TYPE a gauge\n\na 1\n# EOF\n",
+        "no TYPE": "a 1\n# EOF\n",
+        "counter no _total": "# TYPE a counter\na 1\n# EOF\n",
+        "bucket no le": "# TYPE h histogram\nh_bucket 1\n# EOF\n",
+        "no +Inf": '# TYPE h histogram\nh_bucket{le="1"} 1\n# EOF\n',
+        "non-monotone": ('# TYPE h histogram\nh_bucket{le="1"} 5\n'
+                         'h_bucket{le="2"} 3\nh_bucket{le="+Inf"} 5\n'
+                         "# EOF\n"),
+        "bad value": "# TYPE a gauge\na xyz\n# EOF\n",
+        "dup TYPE": "# TYPE a gauge\n# TYPE a gauge\na 1\n# EOF\n",
+    }
+    for why, text in bad.items():
+        with pytest.raises(ValueError):
+            parse_openmetrics(text)
+
+
+def test_openmetrics_lint_cli(tmp_path, capsys):
+    good = tmp_path / "good.txt"
+    good.write_text(to_openmetrics(_sample_registry()))
+    assert lint_cli([str(good)]) == 0
+    assert "OK" in capsys.readouterr().out
+    bad = tmp_path / "bad.txt"
+    bad.write_text("jobs_total 3\n")
+    assert lint_cli([str(bad)]) == 1
+    assert "INVALID" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# registry == Metrics.summary() across backends
+# ---------------------------------------------------------------------------
+
+def _assert_snapshot_matches_summary(snapshot: dict, summary: dict):
+    shared = 0
+    for key, v in summary.items():
+        name = "sched_" + key
+        if name not in snapshot:
+            continue
+        if v is None or isinstance(v, bool) or (isinstance(v, float)
+                                                and math.isnan(v)):
+            continue
+        assert snapshot[name]["samples"][""] == pytest.approx(float(v)), key
+        shared += 1
+    assert shared >= 10  # the summary schema really is in the scrape
+    # the sink-fed completion counter independently agrees
+    assert snapshot["sched_tasks_completed_total"]["samples"][""] \
+        == summary["completed"]
+
+
+def test_events_backend_registry_matches_summary():
+    r = lab.run(_scenario(lab.ObsSpec(probe_every=1.0, metrics=True)),
+                backend="events")
+    snap = r.extras["obs"]["metrics"]
+    _assert_snapshot_matches_summary(snap, dict(r.metrics))
+    by_kind = snap["sched_decisions_total"]["samples"]
+    assert by_kind["kind=place"] >= r.metrics["completed"]
+    assert by_kind["kind=complete"] == r.metrics["completed"]
+
+
+def test_online_service_scrape_matches_summary():
+    sc = _scenario(lab.ObsSpec(probe_every=1.0, metrics=True))
+    svc = SchedulerService.from_scenario(sc)
+    svc.advance(until=10.0)
+    mid = parse_openmetrics(svc.scrape())  # mid-run scrape parses too
+    assert mid["sched_queued_tasks"]["type"] == "gauge"
+    svc.drain()
+    text = svc.scrape()
+    fams = parse_openmetrics(text)
+    summary = svc.summary()
+    for key in ("completed", "makespan", "migrations"):
+        sample = fams["sched_" + key]["samples"][0]
+        assert sample[2] == pytest.approx(float(summary[key])), key
+    # the scrape and the raw snapshot describe the same registry
+    _assert_snapshot_matches_summary(
+        svc.instruments.registry.snapshot(), summary)
+    # collector and DecisionLog fan out from one engine: counts agree
+    assert svc.instruments.registry.value(
+        "sched_decisions_total", kind="place") == svc.log.counts["place"]
+
+
+def test_federated_members_registry_matches_summary():
+    def member(i, rate):
+        return _scenario(
+            lab.ObsSpec(probe_every=2.0, metrics=True),
+            rate=rate, horizon=40.0, n=4).replace(name=f"m{i}", seed=i)
+
+    fed = lab.Federation(
+        name="fed-metrics",
+        members=(member(0, 6.0), member(1, 1.0)),
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+    r = lab.run(fed, backend="federated")
+    for mr, mobs in zip(r.extras["members"], r.extras["obs"]["members"]):
+        _assert_snapshot_matches_summary(mobs["metrics"], mr["metrics"])
+
+
+def test_session_scrape_on_uninstrumented_runtime():
+    rt = ClusterRuntime((2.0, 1.0, 1.0, 0.5), "jsq")
+    s = rt.open_session()
+    wl = make_workload("poisson", horizon=10.0, seed=1, rate=2.0)
+    from repro.serve import WorkloadSource
+    s.feed(WorkloadSource(wl))
+    s.advance(until=5.0)
+    first = attach_collector(rt)
+    fams = parse_openmetrics(s.scrape())
+    # streaming counters start at attach time; gauges still reflect state
+    assert "sched_queued_tasks" in fams
+    s.drain()
+    assert attach_collector(rt) is first  # get-or-create, not re-install
+    fams = parse_openmetrics(s.scrape())
+    assert fams["sched_completed"]["samples"][0][2] == s.metrics.completed
+
+
+# ---------------------------------------------------------------------------
+# decision-sink hardening (satellite: flaky sink must not corrupt state)
+# ---------------------------------------------------------------------------
+
+class _FlakySink:
+    """Raises on every other call of every hook."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def _flaky(self, *a):
+        self.calls += 1
+        if self.calls % 2:
+            raise RuntimeError("flaky sink")
+
+    place = migrate = evict = complete = trigger = alert = _flaky
+
+
+def test_flaky_sink_does_not_corrupt_engine_state():
+    sc = _scenario()
+    clean = lab.run(sc, backend="events").metrics
+
+    from repro.lab.backends import build_events_runtime
+    rt, wl, ins, (failures, joins, resizes) = build_events_runtime(sc)
+    flaky = _FlakySink()
+    rt._sink = flaky
+    rt.schedule_faults(failures=failures, joins=joins, resizes=resizes)
+    rt.schedule_workload(wl)
+    rt.drain()
+    assert flaky.calls > 0
+    assert rt.sink_errors > 0
+    assert rt.sink_errors == (flaky.calls + 1) // 2
+    # byte-identical metrics: the raising sink changed nothing
+    assert rt.metrics.summary() == dict(clean)
+
+
+def test_sink_errors_surface_in_the_registry():
+    sc = _scenario()
+    from repro.lab.backends import build_events_runtime
+    rt, wl, ins, _ = build_events_runtime(sc)
+    collector = RegistryCollector()
+    rt._sink = FanoutSink([_FlakySink(), collector])
+    collector.bind(rt)
+    rt.schedule_workload(wl)
+    rt.drain()
+    collector.refresh()
+    reg = collector.registry
+    assert reg.value("sched_sink_errors_total") == rt.sink_errors > 0
+    # the healthy sink behind the flaky one still saw every completion
+    assert reg.value("sched_tasks_completed_total") == rt.metrics.completed
+
+
+def test_fanout_sink_skips_missing_methods():
+    class OnlyPlace:
+        def __init__(self):
+            self.n = 0
+
+        def place(self, t, task, node):
+            self.n += 1
+
+    a, b = OnlyPlace(), RegistryCollector()
+    fan = FanoutSink([a, b])
+    fan.place(0.0, type("T", (), {"tid": 0, "priority": 0,
+                                  "t_arrive": 0.0})(), 1)
+    fan.trigger(0.0, True)  # OnlyPlace has no trigger hook: skipped
+    assert a.n == 1
+    assert b.registry.value("sched_decisions_total", kind="trigger") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# weighted decision-latency sampling (satellite)
+# ---------------------------------------------------------------------------
+
+def test_tracer_weighted_decision_stats():
+    tr = Tracer(latency_sample=4)
+    for lat in (1e-6, 2e-6, 3e-6, 4e-6):
+        tr.decision("place", lat, weight=4)
+    s = tr.decision_stats()["place"]
+    assert s["n"] == 16 and s["sampled"] == 4
+    assert s["p99_us"] == pytest.approx(4.0)
+    assert s["p999_us"] == pytest.approx(4.0)
+    with pytest.raises(ValueError):
+        Tracer(latency_sample=0)
+
+
+def test_latency_sample_census_mode():
+    sc = _scenario(lab.ObsSpec(trace=True, latency_sample=1))
+    r = lab.run(sc, backend="events")
+    s = r.extras["obs"]["decision_stats"]["place"]
+    # stride 1 = census: every placement timed, weight 1
+    assert s["sampled"] == s["n"]
+    sc8 = _scenario(lab.ObsSpec(trace=True, latency_sample=8))
+    s8 = lab.run(sc8, backend="events").extras["obs"]["decision_stats"]
+    assert s8["place"]["sampled"] < s8["place"]["n"]
+    assert s8["place"]["n"] == s8["place"]["sampled"] * 8
+
+
+# ---------------------------------------------------------------------------
+# federation-wide causal tracing (tentpole)
+# ---------------------------------------------------------------------------
+
+def _traced_federation():
+    def member(i, rate):
+        return _scenario(lab.ObsSpec(trace=True, probe_every=2.0),
+                         rate=rate, horizon=60.0, n=4
+                         ).replace(name=f"m{i}", seed=i)
+
+    return lab.Federation(
+        name="fed-traced",
+        members=(member(0, 8.0), member(1, 1.0)),
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+
+
+def test_stitched_trace_single_causal_chain_across_members():
+    r = lab.run(_traced_federation(), backend="federated")
+    stitched = r.extras["obs"]["stitched_trace"]
+    events = stitched["traceEvents"]
+    assert set(stitched["otherData"]["members"]) == {"m0", "m1"}
+    # index causal events by trace id
+    chains = {}
+    for e in events:
+        args = e.get("args") or {}
+        if "trace_id" in args:
+            chains.setdefault(args["trace_id"], []).append(e)
+    assert chains, "no handed-off task left a causal chain"
+    cross = 0
+    for tid, evs in chains.items():
+        by_sid = {e["args"]["span_id"]: e for e in evs}
+        kinds = {e["name"] for e in evs}
+        if not {"wan_handoff", "task"} <= kinds:
+            continue  # relay still in flight at trace cut (ring etc.)
+        # every non-root span's parent exists in the same chain and
+        # precedes it causally
+        roots = 0
+        for e in evs:
+            parent = e["args"].get("parent_id")
+            if parent is None:
+                roots += 1
+                assert e["name"] == "wan_resident"
+                continue
+            assert parent in by_sid, (tid, e["name"])
+        assert roots == 1
+        # the chain genuinely crosses members: pids from both pid ranges
+        pids = {e["pid"] // 16 for e in evs}
+        if len(pids) > 1:
+            cross += 1
+        # span ids are member-unique (instance in the high bits)
+        insts = {e["args"]["span_id"] >> 32 for e in evs}
+        assert len(insts) == len(pids)
+    assert cross > 0, "no chain crossed a member boundary"
+
+
+def test_stitched_trace_disjoint_pid_ranges_and_names():
+    r = lab.run(_traced_federation(), backend="federated")
+    stitched = r.extras["obs"]["stitched_trace"]
+    names = {e["args"]["name"] for e in stitched["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"m0/nodes", "m0/tasks", "m0/scheduler",
+            "m1/nodes", "m1/tasks", "m1/scheduler"} <= names
+    # strict JSON for chrome://tracing
+    json.dumps(stitched, allow_nan=False)
+
+
+def test_merge_chrome_traces_applies_offsets():
+    t0 = {"traceEvents": [{"name": "a", "ph": "i", "ts": 1e6, "pid": 1,
+                           "tid": 0, "args": {}}], "otherData": {}}
+    merged = merge_chrome_traces([t0, t0], ["x", "y"], offsets=[0.0, 2.0])
+    ts = sorted(e["ts"] for e in merged["traceEvents"])
+    assert ts == [1e6, 3e6]
+    pids = sorted(e["pid"] for e in merged["traceEvents"])
+    assert pids == [1, 17]
+
+
+def test_untraced_tasks_stay_id_free():
+    r = lab.run(_scenario(lab.ObsSpec(trace=True)), backend="events")
+    for e in r.extras["obs"]["chrome_trace"]["traceEvents"]:
+        args = e.get("args") or {}
+        assert "trace_id" not in args  # no WAN hand-off, no causal ids
+
+
+# ---------------------------------------------------------------------------
+# online anomaly detection (tentpole)
+# ---------------------------------------------------------------------------
+
+def test_ewma_mad_scoring():
+    em = EwmaMad(alpha=0.25, window=16, warmup=4, min_scale=0.5)
+    assert em.update(0.0) == 0.0  # warming
+    for _ in range(10):
+        z = em.update(0.0)
+    assert z == 0.0
+    for _ in range(20):
+        z = em.update(10.0)
+    assert z > 6.0  # sustained shift scores as many sigma
+    assert em.update(float("nan")) == 0.0
+    with pytest.raises(ValueError):
+        EwmaMad(alpha=0.0)
+    with pytest.raises(ValueError):
+        EwmaMad(warmup=1)
+    with pytest.raises(ValueError):
+        EwmaMad(min_scale=-1.0)
+
+
+def test_anomaly_flags_queue_ramp_before_trigger_fires():
+    # heavy overload with the trigger held off: the queue ramps while the
+    # reactive monitor never gets to fire — the detector must lead it
+    sc = _scenario(lab.ObsSpec(probe_every=0.5, metrics=True,
+                               anomaly=True),
+                   rate=40.0, horizon=20.0, period=100.0)
+    r = lab.run(sc, backend="events")
+    obs = r.extras["obs"]
+    fires = [e["t"] for e in obs["trigger"]["events"] if e["fired"]]
+    growth = [a for a in obs["alerts"] if a["kind"] == "queue_growth"]
+    assert growth, "ramp raised no queue_growth alert"
+    first_alert = growth[0]["t"]
+    assert not fires or first_alert < fires[0]
+    # alerts also ride the sink into the registry
+    snap = obs["metrics"]
+    assert snap["obs_alerts_total"]["samples"]["kind=queue_growth"] \
+        == len(growth)
+    assert snap["obs_alerts_active"]["samples"][""] == len(obs["alerts"])
+
+
+def test_anomaly_balanced_control_stays_silent():
+    sc = _scenario(lab.ObsSpec(probe_every=0.5, anomaly=True),
+                   rate=3.0, horizon=30.0)
+    r = lab.run(sc, backend="events")
+    assert r.extras["obs"]["alerts"] == []
+
+
+def test_anomaly_trigger_storm_detector():
+    mon = AnomalyMonitor(storm_window=10.0, storm_count=3, cooldown=5)
+    out = []
+    for i in range(6):
+        out += mon.observe_trigger(float(i), True)
+    assert [a["kind"] for a in out] == ["trigger_storm"]
+    assert out[0]["fires"] == 4
+    # skips never count toward a storm
+    mon2 = AnomalyMonitor(storm_window=10.0, storm_count=3)
+    for i in range(10):
+        assert mon2.observe_trigger(float(i), False) == []
+
+
+def test_anomaly_cooldown_rate_limits_episodes():
+    mon = AnomalyMonitor(storm_window=100.0, storm_count=1, cooldown=4)
+    raised = []
+    for i in range(10):
+        raised += mon.observe_trigger(float(i), True)
+    # one alert per cooldown window, not one per fire
+    assert 1 < len(raised) < 10
+
+
+def test_anomaly_spec_validation():
+    with pytest.raises(ValueError, match="probe"):
+        lab.ObsSpec(anomaly=True)
+    with pytest.raises(ValueError, match="latency_sample"):
+        lab.ObsSpec(latency_sample=0)
+    with pytest.raises(ValueError, match="drift_margin"):
+        AnomalyMonitor(drift_margin=1.5)
+    with pytest.raises(ValueError, match="k must"):
+        AnomalyMonitor(k=0.0)
+    with pytest.raises(ValueError, match="probe"):
+        ClusterRuntime((1.0, 1.0), "jsq", anomaly=AnomalyMonitor())
+
+
+def test_obs_spec_fingerprint_neutral():
+    base = _scenario()
+    ops = _scenario(lab.ObsSpec(probe_every=1.0, metrics=True,
+                                anomaly=True, latency_sample=4))
+    assert base.fingerprint() == ops.fingerprint()
+
+
+def test_alerts_stream_through_decision_log():
+    sc = _scenario(lab.ObsSpec(probe_every=0.5, anomaly=True),
+                   rate=40.0, horizon=15.0, period=100.0)
+    svc = SchedulerService.from_scenario(sc)
+    svc.drain()
+    alerts = [d for d in svc.log if d.kind == "alert"]
+    assert alerts and alerts[0].info["kind"] == "queue_growth"
+    assert svc.log.counts["alert"] == len(alerts)
+
+
+# ---------------------------------------------------------------------------
+# serve wiring: HTTP endpoint + CLI metrics stream
+# ---------------------------------------------------------------------------
+
+def test_metrics_http_server_serves_scrape():
+    reg = _sample_registry()
+    with MetricsHTTPServer(lambda: to_openmetrics(reg), port=0) as srv:
+        body = urllib.request.urlopen(srv.url).read().decode()
+        assert parse_openmetrics(body)["jobs"]["type"] == "counter"
+        with pytest.raises(urllib.error.HTTPError) as err:
+            urllib.request.urlopen(srv.url.replace("/metrics", "/other"))
+        assert err.value.code == 404
+
+
+def test_serve_cli_metrics_stream(tmp_path, capsys):
+    sc_path = tmp_path / "sc.json"
+    sc_path.write_text(_scenario(rate=2.0, horizon=15.0).to_json())
+    mx = tmp_path / "metrics.jsonl"
+    dec = tmp_path / "dec.jsonl"
+    rc = lab_cli(["serve", str(sc_path), "--decisions-out", str(dec),
+                  "--metrics-out", str(mx), "--metrics-every", "5"])
+    assert rc == 0
+    rows = [json.loads(line) for line in mx.read_text().splitlines()]
+    assert len(rows) >= 2
+    assert rows[0]["t"] <= rows[-1]["t"]
+    done = [r["metrics"]["sched_tasks_completed_total"]["samples"][""]
+            for r in rows]
+    assert done == sorted(done)  # counters are monotone over the stream
+    with pytest.raises(SystemExit):
+        lab_cli(["serve", str(sc_path), "--metrics-every", "0"])
+
+
+def test_serve_cli_metrics_port(tmp_path, capsys):
+    # --metrics-port runs the endpoint for the service's lifetime; the
+    # URL lands on stderr even though the run finishes quickly
+    sc_path = tmp_path / "sc.json"
+    sc_path.write_text(_scenario(rate=1.0, horizon=5.0).to_json())
+    rc = lab_cli(["serve", str(sc_path), "--decisions-out",
+                  str(tmp_path / "d.jsonl"), "--metrics-port", "0"])
+    assert rc == 0
+    assert "metrics endpoint: http://" in capsys.readouterr().err
