@@ -45,12 +45,17 @@ def _member(i: int, rate: float, seed: int) -> lab.Scenario:
         engine_seed=7)
 
 
-def _federation(kind: str, seed: int) -> lab.Federation:
-    return lab.Federation(
+def _federation(kind: str, seed: int, **overrides) -> lab.Federation:
+    fields = dict(
         name=f"skew-{kind}",
         members=tuple(_member(i, r, seed) for i, r in enumerate(RATES)),
         topology=lab.TopologySpec(kind=kind, bandwidth=8.0, latency=2.0),
-        exchange_period=4.0)
+        exchange_period=4.0,
+        # the skew suite predates the async engine: stay on lockstep so
+        # its trajectory stays like-for-like with the PR 3-9 baselines
+        mode="lockstep")
+    fields.update(overrides)
+    return lab.Federation(**fields)
 
 
 def federation_skew() -> list[tuple[str, float, str]]:
@@ -122,4 +127,70 @@ def federation_fastpath() -> list[tuple[str, float, str]]:
         f"mean_resp_events={r_events['mean_response']:.3f}")]
 
 
-ALL = [federation_skew, federation_fastpath]
+def federation_stealing() -> list[tuple[str, float, str]]:
+    """Pull vs push under the same 4-cluster skew (PR 10): identical
+    members and full WAN topology, only the exchange policy flips, both on
+    the async engine. The acceptance claim — stealing matches or beats
+    positional push on mean completion time — is encoded as the
+    ``steal_over_push`` ratio (>= 1 is a win) and gated by an absolute
+    floor in ``compare.py``."""
+    seeds = (0, 1)
+    rows = []
+    means: dict[str, float] = {}
+    for policy in ("push", "stealing"):
+        mean = migrations = steals = us = 0.0
+        for seed in seeds:
+            fed = _federation("full", seed, mode="async", exchange=policy,
+                              name=f"skew-{policy}")
+            t0 = time.perf_counter()
+            r = lab.run(fed, backend="federated", vectorize=False)
+            us += (time.perf_counter() - t0) * 1e6
+            assert r["completed"] == r["arrived"], (policy, seed)
+            mean += r["mean_response"] / len(seeds)
+            migrations += r.extras["wan"]["migrations"]
+            steals += r.extras["wan"]["steals"]
+        means[policy] = mean
+        rows.append((
+            f"federation/steal/{policy}", us / len(seeds),
+            f"mean_resp={mean:.3f};wan_migrations={int(migrations)};"
+            f"steals={int(steals)}"))
+    rows.append((
+        "federation/steal/vs_push", 0.0,
+        f"steal_over_push={means['push'] / means['stealing']:.3f}"))
+    return rows
+
+
+def federation_async() -> list[tuple[str, float, str]]:
+    """Async event-heap stepping vs lockstep epochs on the skew federation
+    (PR 10 tentpole): same members, same full topology, same exchange
+    grid — the async engine stops arming evaluations once no member can
+    requeue work, so the drain tail is free. ``async_speedup`` is a
+    wall-clock ratio (machine-dependent level, absolute floor in
+    ``compare.py``); the mean completion times are reported for both so
+    the quality trajectory is gated too."""
+    seeds = (0, 1)
+    wall: dict[str, float] = {}
+    mean: dict[str, float] = {}
+    evals: dict[str, int] = {}
+    for mode in ("lockstep", "async"):
+        wall[mode] = mean[mode] = 0.0
+        evals[mode] = 0
+        for seed in seeds:
+            fed = _federation("full", seed, mode=mode)
+            t0 = time.perf_counter()
+            r = lab.run(fed, backend="federated", vectorize=False)
+            wall[mode] += (time.perf_counter() - t0) * 1e6
+            assert r["completed"] == r["arrived"], (mode, seed)
+            mean[mode] += r["mean_response"] / len(seeds)
+            evals[mode] += r.extras["epochs"]
+    return [(
+        "federation/async/skew", wall["async"] / len(seeds),
+        f"lockstep_us={wall['lockstep'] / len(seeds):.1f};"
+        f"async_speedup={wall['lockstep'] / wall['async']:.2f};"
+        f"mean_resp_async={mean['async']:.3f};"
+        f"mean_resp_lockstep={mean['lockstep']:.3f};"
+        f"evals_async={evals['async']};evals_lockstep={evals['lockstep']}")]
+
+
+ALL = [federation_skew, federation_fastpath, federation_stealing,
+       federation_async]

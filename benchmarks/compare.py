@@ -52,6 +52,8 @@ HIGHER_IS_BETTER = (
     "tasks_per_second",
     "decisions_per_second",  # streaming-service throughput (PR 8)
     "online_matches_events",  # 1 while the equivalence property holds
+    "steal_over_push",  # pull vs push mean completion under skew (PR 10)
+    "async_speedup",    # async engine vs lockstep wall-clock (PR 10)
 )
 # absolute ceilings enforced on the fresh run alone, no baseline needed:
 # wall-clock ratios drift run-to-run (relative gating would be noise) but
@@ -70,6 +72,13 @@ ABS_CEILINGS = {
 # an order of magnitude faster) holds on any machine.
 ABS_FLOORS = {
     ("federation/fastpath", "speedup"): 5.0,
+    # the PR 10 acceptance claim: stealing matches or beats positional
+    # push on mean completion under 4-cluster skew (ratio ~1.0; floored
+    # with headroom for engine tweaks, never below "matching")
+    ("federation/steal", "steal_over_push"): 0.95,
+    # the async engine must stay in lockstep's wall-clock ballpark (the
+    # ratio hovers around 1.0 and moves with host scheduling noise)
+    ("federation/async", "async_speedup"): 0.7,
 }
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = 1e-9

@@ -22,14 +22,27 @@ accounting in ``extras``. A link-free federation of uniform members
 auto-lowers to one compiled ``lax.scan`` batch.
 """
 
-from .balancer import ExchangeStats, admit, choose_destination
-from .specs import TOPOLOGY_KINDS, Federation, LinkSpec, TopologySpec
-from .runtime import FederatedRuntime, FederationReport, aggregate_metrics
+from .balancer import ExchangeStats, admit, choose_destination, choose_victim
+from .specs import (
+    EXCHANGE_POLICIES,
+    FEDERATION_MODES,
+    TOPOLOGY_KINDS,
+    Federation,
+    LinkSpec,
+    TopologySpec,
+)
+from .runtime import (
+    FederatedRuntime,
+    FederationReport,
+    WanMessage,
+    aggregate_metrics,
+)
 from .backend import FederatedBackend
 
 __all__ = [
     "Federation", "LinkSpec", "TopologySpec", "TOPOLOGY_KINDS",
-    "choose_destination", "admit", "ExchangeStats",
-    "FederatedRuntime", "FederationReport", "aggregate_metrics",
-    "FederatedBackend",
+    "FEDERATION_MODES", "EXCHANGE_POLICIES",
+    "choose_destination", "choose_victim", "admit", "ExchangeStats",
+    "FederatedRuntime", "FederationReport", "WanMessage",
+    "aggregate_metrics", "FederatedBackend",
 ]

@@ -7,13 +7,14 @@ in the canonical metric schema, with every per-member RunResult under
 ``lab.run`` / ``lab.sweep`` / the CLI treat a federation exactly like any
 other experiment.
 
-Two execution models:
+Execution models:
 
-* lockstep events (the reference): N ``ClusterRuntime`` s stepped in
-  ``exchange_period`` epochs with the top-level positional balancer moving
-  admitted work over WAN links (``FederatedRuntime``).
+* event-driven (the reference): N ``ClusterRuntime`` s (or nested
+  federations) under ``FederatedRuntime``, driven per ``spec.mode`` —
+  ``async`` (event-heap stepping, the default) or ``lockstep``
+  (conformance epochs). Reported as ``{mode}-events``.
 * a vectorized fast path for the no-exchange case: a link-free federation
-  of members that are uniform-but-for-seed lowers to ONE compiled
+  of flat members that are uniform-but-for-seed lowers to ONE compiled
   ``lax.scan`` call on the existing batched backend — the isolated baseline
   of a federation benchmark costs one accelerator dispatch, not N engine
   runs. Auto-selected; force with ``vectorize=True/False``.
@@ -37,10 +38,10 @@ from .specs import Federation
 __all__ = ["FederatedBackend"]
 
 
-def _member_result(member, metrics: Metrics) -> RunResult:
+def _member_result(member, metrics: Metrics, model: str) -> RunResult:
     return RunResult(
         fingerprint=member.fingerprint(), backend="federated",
-        backend_options={"model": "lockstep-events"},
+        backend_options={"model": model},
         metrics=make_metrics(**metrics.summary()),
         scenario_name=member.name)
 
@@ -56,7 +57,12 @@ class FederatedBackend(Backend):
                     "legacy")
         events = get_backend("events")
         for i, member in enumerate(spec.members):
-            reason = events.eligible(member)
+            # a member may itself be a federation (recursion level k+2):
+            # its own members must be eligible all the way down
+            if getattr(member, "is_federation", False):
+                reason = self.eligible(member)
+            else:
+                reason = events.eligible(member)
             if reason is not None:
                 return f"member {i} ({member.name or 'unnamed'}): {reason}"
         try:
@@ -74,7 +80,9 @@ class FederatedBackend(Backend):
         members = list(spec.members)
         links = spec.topology.resolve(spec.n_members)
         batched = get_backend("batched")
-        can_vectorize = (not links and uniform_but_for_seed(members)
+        nested = any(getattr(m, "is_federation", False) for m in members)
+        can_vectorize = (not links and not nested
+                         and uniform_but_for_seed(members)
                          and batched.eligible(members[0]) is None)
         if vectorize is None:
             vectorize = can_vectorize
@@ -84,16 +92,18 @@ class FederatedBackend(Backend):
                 "link-free federations whose members are uniform but for "
                 "seed/name and batched-eligible; this one "
                 + ("has WAN links" if links else
+                   "has nested federation members" if nested else
                    "is not expressible on the batched backend"))
         if vectorize:
             return self._run_vectorized(spec, members, batched)
-        return self._run_lockstep(spec, members)
+        return self._run_events(spec, members)
 
-    # -- lockstep events (reference) ----------------------------------------
-    def _run_lockstep(self, spec: Federation, members) -> RunResult:
+    # -- event-driven (reference; async or lockstep per spec.mode) ----------
+    def _run_events(self, spec: Federation, members) -> RunResult:
+        model = f"{spec.mode}-events"
         frt = FederatedRuntime(spec)
         report = frt.run()
-        per_member = [_member_result(m, rm)
+        per_member = [_member_result(m, rm, model)
                       for m, rm in zip(members, report.members)]
         extras = {
             "members": [r.to_dict() for r in per_member],
@@ -116,7 +126,8 @@ class FederatedBackend(Backend):
         return RunResult(
             fingerprint=spec.fingerprint(), backend=self.name,
             backend_options={
-                "model": "lockstep-events",
+                "model": model,
+                "exchange": spec.exchange,
                 "n_members": spec.n_members,
                 "links": len(spec.topology.resolve(spec.n_members)),
                 "exchange_period": spec.exchange_period,
@@ -163,6 +174,7 @@ class FederatedBackend(Backend):
             extras={
                 "members": [r.to_dict() for r in results],
                 "wan": {"epochs": 0, "migrations": 0, "moved_units": 0.0,
-                        "moved_packets": 0.0, "rejected": 0},
+                        "moved_packets": 0.0, "rejected": 0, "steals": 0,
+                        "evictions_retargeted": 0, "evictions_dropped": 0},
             },
             scenario_name=spec.name)

@@ -24,7 +24,7 @@ import numpy as np
 from ..core.pslb import owner_of_fraction
 from ..core.scan import exclusive_scan_np
 
-__all__ = ["choose_destination", "admit", "ExchangeStats"]
+__all__ = ["choose_destination", "choose_victim", "admit", "ExchangeStats"]
 
 _TINY = 1e-12
 
@@ -50,12 +50,42 @@ def choose_destination(loads: np.ndarray, powers: np.ndarray,
     ds = deficit.sum()
     if ds > _TINY:
         lam = exclusive_scan_np(deficit / ds)
-        return int(owner_of_fraction(lam, np.array([0.5]))[0])
+        dst = int(owner_of_fraction(lam, np.array([0.5]))[0])
+        if deficit[dst] + _TINY >= work:
+            return dst
+        # the positional owner cannot absorb this task inside its fair-
+        # share deficit; fall through to the deepest reachable deficit,
+        # and only when even that would overshoot does the task stay
+        dst = int(np.argmax(deficit))
+        return dst if deficit[dst] + _TINY >= work else -1
     # no reachable deficit: fall back to the least normalised load, the same
     # fallback the in-cluster positional rule uses when the grid is full
     ratio = np.where(usable, loads / np.maximum(powers, _TINY), np.inf)
     dst = int(np.argmin(ratio))
     return dst if np.isfinite(ratio[dst]) else -1
+
+
+def choose_victim(loads: np.ndarray, powers: np.ndarray,
+                  reachable: np.ndarray) -> int:
+    """Pick the member an underloaded thief steals from — the pull-side
+    dual of :func:`choose_destination`.
+
+    Among the clusters reachable over an inbound link, the one with the
+    largest surplus above its *global* fair share ``Pi_c / Pi * W`` wins;
+    -1 when no reachable cluster is overloaded (nothing worth pulling).
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    powers = np.asarray(powers, dtype=np.float64)
+    reachable = np.asarray(reachable, dtype=bool)
+    usable = reachable & (powers > 0)
+    # a powered-down member is still worth robbing: its work is stranded
+    usable |= reachable & (loads > _TINY)
+    if not usable.any():
+        return -1
+    fair = powers / max(powers.sum(), _TINY) * loads.sum()
+    surplus = np.where(usable, loads - fair, -np.inf)
+    victim = int(np.argmax(surplus))
+    return victim if surplus[victim] > _TINY else -1
 
 
 def admit(load_src: float, power_src: float, load_dst: float,
@@ -87,6 +117,9 @@ class ExchangeStats:
     moved_units: float = 0.0
     moved_packets: float = 0.0
     rejected: int = 0  # admission-check refusals
+    steals: int = 0  # migrations initiated by the pull side
+    evictions_retargeted: int = 0  # eviction rows that followed a hand-off
+    evictions_dropped: int = 0  # rows overtaken by the WAN transfer itself
 
     def to_dict(self) -> dict:
         return {
@@ -95,4 +128,7 @@ class ExchangeStats:
             "moved_units": self.moved_units,
             "moved_packets": self.moved_packets,
             "rejected": self.rejected,
+            "steals": self.steals,
+            "evictions_retargeted": self.evictions_retargeted,
+            "evictions_dropped": self.evictions_dropped,
         }

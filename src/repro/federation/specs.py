@@ -23,7 +23,8 @@ from typing import Mapping
 
 from ..lab.specs import Scenario, _SpecBase, _spec_hash, _thaw
 
-__all__ = ["LinkSpec", "TopologySpec", "Federation", "TOPOLOGY_KINDS"]
+__all__ = ["LinkSpec", "TopologySpec", "Federation", "TOPOLOGY_KINDS",
+           "FEDERATION_MODES", "EXCHANGE_POLICIES"]
 
 
 @dataclass(frozen=True)
@@ -127,6 +128,21 @@ class TopologySpec(_SpecBase):
             for s, d in pairs)
 
 
+FEDERATION_MODES = ("async", "lockstep")
+EXCHANGE_POLICIES = ("push", "stealing")
+
+
+def _coerce_member(m):
+    """Scenario | Federation | mapping -> Scenario | Federation. A mapping
+    with a ``members`` key is a nested federation (recursion level k+2:
+    racks -> clusters -> regions); anything else is one member cluster."""
+    if isinstance(m, Scenario) or getattr(m, "is_federation", False):
+        return m
+    if isinstance(m, Mapping) and "members" in m:
+        return Federation.from_dict(dict(m))
+    return Scenario.from_dict(dict(m))
+
+
 @dataclass(frozen=True)
 class Federation(_SpecBase):
     """N member clusters exchanging work over WAN links.
@@ -136,12 +152,22 @@ class Federation(_SpecBase):
     ``admission_margin`` is the predicted completion-time gain, in time
     units, a WAN migration must clear to be admitted (reservation-style
     admission: 0 admits any predicted improvement).
+
+    ``mode`` picks the driving engine: ``async`` (the default) advances
+    members to their own next event with WAN hand-offs as timestamped
+    in-flight messages; ``lockstep`` is the conformance-reference epoch
+    stepper. ``exchange`` picks the balancing policy: positional ``push``
+    (overloaded members send) or pull-based ``stealing`` (underloaded
+    members request). Members may themselves be federations — the
+    positional rule applies per level.
     """
 
-    members: tuple[Scenario, ...] = ()
+    members: tuple = ()
     topology: TopologySpec = field(default_factory=TopologySpec)
     exchange_period: float = 4.0
     admission_margin: float = 0.0
+    mode: str = "async"
+    exchange: str = "push"
     name: str = ""
 
     # marker the lab backends key eligibility on (duck-typed to avoid an
@@ -149,9 +175,7 @@ class Federation(_SpecBase):
     is_federation = True
 
     def __post_init__(self):
-        members = tuple(
-            m if isinstance(m, Scenario) else Scenario.from_dict(dict(m))
-            for m in self.members)
+        members = tuple(_coerce_member(m) for m in self.members)
         if not members:
             raise ValueError("a federation needs at least one member "
                              "Scenario")
@@ -160,6 +184,12 @@ class Federation(_SpecBase):
             raise ValueError("exchange_period must be > 0")
         if self.admission_margin < 0:
             raise ValueError("admission_margin must be >= 0")
+        if self.mode not in FEDERATION_MODES:
+            raise ValueError(f"unknown federation mode {self.mode!r}; "
+                             f"have {sorted(FEDERATION_MODES)}")
+        if self.exchange not in EXCHANGE_POLICIES:
+            raise ValueError(f"unknown exchange policy {self.exchange!r}; "
+                             f"have {sorted(EXCHANGE_POLICIES)}")
 
     @property
     def n_members(self) -> int:
@@ -170,9 +200,7 @@ class Federation(_SpecBase):
     def from_dict(cls, d: dict) -> "Federation":
         d = dict(d)
         if "members" in d:
-            d["members"] = tuple(
-                Scenario.from_dict(dict(m)) if isinstance(m, Mapping) else m
-                for m in d["members"])
+            d["members"] = tuple(_coerce_member(m) for m in d["members"])
         if "topology" in d and isinstance(d["topology"], Mapping):
             d["topology"] = TopologySpec.from_dict(dict(d["topology"]))
         known = {f.name for f in fields(cls)}
@@ -194,8 +222,7 @@ class Federation(_SpecBase):
         member-wise, so an instrumented federation shares the fingerprint
         of its un-instrumented twin)."""
         d = self.to_dict()
-        for member in d.get("members", []):
-            member.pop("obs", None)
+        _strip_obs(d)
         canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(canon.encode()).hexdigest()[:16]
 
@@ -221,6 +248,15 @@ class Federation(_SpecBase):
             else:
                 node[leaf] = _thaw(value)
         return Federation.from_dict(d)
+
+
+def _strip_obs(fed_dict: dict) -> None:
+    """Drop telemetry config member-wise, at every nesting level."""
+    for member in fed_dict.get("members", []):
+        if "members" in member:
+            _strip_obs(member)
+        else:
+            member.pop("obs", None)
 
 
 for _cls in (LinkSpec, TopologySpec, Federation):

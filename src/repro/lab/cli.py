@@ -94,11 +94,41 @@ def _preset_geo_federation() -> Federation:
         exchange_period=4.0)
 
 
+def _preset_planet_federation() -> Federation:
+    """Hierarchy (the paper's recursion at level k+2): two regional
+    federations of two clusters each plus a standalone cluster, stealing
+    work asynchronously over the inter-region WAN."""
+    def dc(i: int, rate: float) -> Scenario:
+        return Scenario(
+            name=f"dc{i}",
+            cluster=ClusterSpec(n_nodes=4, power_seed=i, bandwidth=256.0),
+            workload=WorkloadSpec(process="poisson", horizon=60.0,
+                                  work_mean=6.0, params={"rate": rate}),
+            policy=PolicySpec(name="psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+            seed=i)
+
+    def region(j: int, rates) -> Federation:
+        return Federation(
+            name=f"region{j}",
+            members=tuple(dc(2 * j + i, r) for i, r in enumerate(rates)),
+            topology=TopologySpec(kind="full", bandwidth=16.0, latency=1.0),
+            exchange_period=2.0)
+
+    return Federation(
+        name="planet-federation",
+        members=(region(0, (10.0, 2.0)), region(1, (2.0, 2.0)),
+                 dc(4, 2.0)),
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0, exchange="stealing")
+
+
 PRESETS = {
     "basic": _preset_basic,
     "bursty-failover": _preset_bursty_failover,
     "paper-static": _preset_paper_static,
     "geo-federation": _preset_geo_federation,
+    "planet-federation": _preset_planet_federation,
 }
 
 

@@ -75,6 +75,26 @@ class EventQueue:
             return len(self._heap)
         return sum(self._pending[k] for k in kinds)
 
+    def extract(self, kind: EventKind, match) -> list[Event]:
+        """Remove and return every queued event of ``kind`` whose payload
+        satisfies ``match``, in time order. The heap is rebuilt once, so
+        callers can re-target a whole batch (e.g. a migrated task's
+        remaining eviction rows) at linear cost."""
+        if not self._pending[kind]:
+            return []
+        keep, out = [], []
+        for item in self._heap:
+            ev = item[3]
+            if ev.kind == kind and match(ev.payload):
+                out.append(ev)
+            else:
+                keep.append(item)
+        if out:
+            heapq.heapify(keep)
+            self._heap = keep
+            self._pending[kind] -= len(out)
+        return sorted(out, key=lambda ev: ev.time)
+
     def __len__(self) -> int:
         return len(self._heap)
 

@@ -270,6 +270,16 @@ class ClusterRuntime:
                 loads[n] += r.work - self._progress(r, n, t)
         return loads
 
+    def total_load(self, t: float) -> float:
+        """Cluster-level outstanding work W_c at ``t`` — the one number a
+        federation balancer sees for this member."""
+        return float(self.loads(t).sum())
+
+    @property
+    def total_power(self) -> float:
+        """Cluster-level power Pi_c under the current grid state."""
+        return float(self.grid.total_power)
+
     def view(self, t: float,
              feasible: np.ndarray | None = None) -> ClusterView:
         return ClusterView(time=t, grid=self.grid, loads=self.loads(t),
@@ -920,6 +930,26 @@ class ClusterRuntime:
             self._unqueue(task.node, task)
         self.tasks.pop(task.tid, None)
         task.node = -1
+
+    def extract_evictions(self, tid: int) -> list[float]:
+        """Remove this task's still-pending exogenous eviction rows and
+        return their times, in order. A WAN hand-off re-targets them to
+        the member that now holds the task — left here they would fire as
+        silent no-ops and churn replay would under-evict."""
+        return [ev.time for ev in self._eq.extract(
+            EventKind.EVICTION, lambda payload: payload == tid)]
+
+    def requeue_pending(self) -> bool:
+        """True while queued work exists or events that can still (re)queue
+        work are scheduled — arrivals, hand-off landings, evictions and
+        capacity churn. A federation stops arming exchange evaluations once
+        every member reports False: tasks already running to completion
+        can never become balancer-movable again."""
+        if any(self._queues):
+            return True
+        return bool(self._eq.pending(
+            EventKind.ARRIVAL, EventKind.MIGRATION_ARRIVE,
+            EventKind.EVICTION, EventKind.NODE_FAIL, EventKind.NODE_RESIZE))
 
     def submit(self, task: Task, t: float | None = None, *,
                arrival: bool = True, evictions=()) -> None:

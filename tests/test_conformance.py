@@ -264,11 +264,9 @@ def test_zero_resize_is_a_failure_on_every_backend():
     assert e["failures"] == 2 and e["joins"] == 2  # zero-resize = failure
 
 
-def test_federated_members_replay_eviction_streams_in_lockstep(tmp_path):
-    """Two members, each with its own eviction stream from a normalized
-    CSV + sidecar; the lockstep run conserves tasks AND work units
-    federation-wide while WAN exchange is live."""
-    from repro.federation import Federation, TopologySpec
+def _churn_members(tmp_path) -> list:
+    """Two skewed members, each replaying an eviction stream from a
+    normalized CSV + sidecar (the PR 5 churn scenarios)."""
     members = []
     rng = np.random.default_rng(5)
     for i, rate in enumerate((18, 2)):  # skewed: WAN exchange happens
@@ -295,10 +293,20 @@ def test_federated_members_replay_eviction_streams_in_lockstep(tmp_path):
                 horizon=None),
             policy=lab.PolicySpec("psts", trigger_period=1.0,
                                   params={"floor": 0.05})))
+    return members
+
+
+@pytest.mark.parametrize("mode", ["lockstep", "async"])
+def test_federated_members_replay_eviction_streams(tmp_path, mode):
+    """Churn replay conserves tasks AND work units federation-wide while
+    WAN exchange is live — in both stepping modes (the async engine must
+    not lose in-flight work or eviction rows to its event heap)."""
+    from repro.federation import Federation, TopologySpec
+    members = _churn_members(tmp_path)
     fed = Federation(members=tuple(members),
                      topology=TopologySpec(kind="full", bandwidth=16.0,
                                            latency=1.0),
-                     exchange_period=2.0)
+                     exchange_period=2.0, mode=mode)
     from repro.federation.runtime import FederatedRuntime
     frt = FederatedRuntime(fed)
     report = frt.run()
@@ -312,6 +320,23 @@ def test_federated_members_replay_eviction_streams_in_lockstep(tmp_path):
     end = frt.work_census(1e9)
     assert end["conservation_gap"] <= 1e-6 * max(end["admitted"], 1.0)
     assert end["admitted"] == pytest.approx(end["completed"])
+
+
+def test_lockstep_and_async_agree_on_link_free_churn(tmp_path):
+    """With no WAN links there is nothing for the stepping modes to
+    disagree about: every member runs its own trace to completion, so the
+    lockstep and async engines must produce identical ``Metrics.summary()``
+    dictionaries on the PR 5 churn members."""
+    from repro.federation import Federation, TopologySpec
+    members = tuple(_churn_members(tmp_path))
+    topo = TopologySpec(kind="isolated")
+    summaries = {}
+    for mode in ("lockstep", "async"):
+        from repro.federation.runtime import FederatedRuntime
+        frt = FederatedRuntime(Federation(members=members, topology=topo,
+                                          exchange_period=2.0, mode=mode))
+        summaries[mode] = frt.run().aggregate.summary()
+    assert summaries["lockstep"] == summaries["async"]
 
 
 def test_batched_rejects_eviction_traces_with_reason(tmp_path):

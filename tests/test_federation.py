@@ -184,14 +184,14 @@ def test_eligibility_reasons_route_specs_to_the_right_backend():
 
 
 # ---------------------------------------------------------------------------
-# lockstep runtime: conservation + the headline behavior
+# event-driven runtime: conservation + the headline behavior
 # ---------------------------------------------------------------------------
 
 def test_federated_run_conserves_tasks_and_beats_isolated():
     fed = _federation(rates=(8.0, 1.0))
     r = lab.run(fed, backend="federated")
     assert r.backend == "federated"
-    assert r.backend_options["model"] == "lockstep-events"
+    assert r.backend_options["model"] == "async-events"
     assert r["completed"] == r["arrived"] > 0
     assert r.extras["wan"]["migrations"] > 0
     members = r.extras["members"]
@@ -259,9 +259,9 @@ def test_vectorize_flag_is_validated():
     linked = fed.replace(topology=TopologySpec(kind="ring"))
     with pytest.raises(lab.BackendError, match="WAN links"):
         lab.run(linked, backend="federated", vectorize=True)
-    # forcing the lockstep path on an isolated federation is allowed
+    # forcing the event-driven path on an isolated federation is allowed
     r = lab.run(fed, backend="federated", vectorize=False)
-    assert r.backend_options["model"] == "lockstep-events"
+    assert r.backend_options["model"] == "async-events"
     with pytest.raises(TypeError, match="vectorize only"):
         lab.run(fed, backend="federated", nonsense=1)
 

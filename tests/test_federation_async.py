@@ -1,0 +1,275 @@
+"""PR 10: the async federation engine and its satellites — absorption-aware
+positional push (the ``break`` -> ``continue`` regression), pull-based
+stealing, eviction re-targeting across WAN hand-offs, hierarchical
+(federation-of-federations) members, async session verbs, and the merged
+federation registry/scrape surface."""
+
+import numpy as np
+import pytest
+
+from repro import lab
+from repro.federation import (
+    FederatedRuntime,
+    TopologySpec,
+    choose_destination,
+    choose_victim,
+)
+
+
+def _member(i: int, rate: float, *, horizon: float = 60.0,
+            **overrides) -> lab.Scenario:
+    fields = dict(
+        name=f"dc{i}",
+        cluster=lab.ClusterSpec(n_nodes=4, power_seed=i, bandwidth=256.0),
+        workload=lab.WorkloadSpec(process="poisson", horizon=horizon,
+                                  work_mean=6.0, params={"rate": rate}),
+        policy=lab.PolicySpec("psts", trigger_period=1.0,
+                              params={"floor": 0.05}),
+        seed=i)
+    fields.update(overrides)
+    return lab.Scenario(**fields)
+
+
+def _federation(rates=(8.0, 1.0), kind="full", **overrides) -> lab.Federation:
+    fields = dict(
+        name="test-fed",
+        members=tuple(_member(i, r) for i, r in enumerate(rates)),
+        topology=TopologySpec(kind=kind, bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+    fields.update(overrides)
+    return lab.Federation(**fields)
+
+
+def _trace_member(tmp_path, name: str, rows, *, powers=(1.0,)) -> lab.Scenario:
+    csv = tmp_path / f"{name}.csv"
+    csv.write_text("".join(f"{t},{w},{p}\n" for t, w, p in rows))
+    return lab.Scenario(
+        name=name,
+        cluster=lab.ClusterSpec(powers=powers, bandwidth=256.0),
+        workload=lab.WorkloadSpec(trace_path=str(csv), horizon=None),
+        policy=lab.PolicySpec("arrival_only"))
+
+
+# ---------------------------------------------------------------------------
+# balancer: absorption-aware destination choice, victim choice
+# ---------------------------------------------------------------------------
+
+def test_choose_destination_requires_an_absorbing_deficit():
+    loads = np.array([60.0, 0.0, 0.0])
+    powers = np.array([10.0, 10.0, 10.0])
+    reach = np.array([False, True, True])
+    # a 50-unit task overflows every reachable fair-share deficit (~36.7
+    # each): it stays put instead of creating a new hotspot
+    assert choose_destination(loads, powers, reach, 50.0) == -1
+    # a 5-unit task fits and goes to a reachable deficit member
+    assert choose_destination(loads, powers, reach, 5.0) in (1, 2)
+    # unreachable members are never destinations, however empty
+    assert choose_destination(loads, powers,
+                              np.array([False, False, False]), 5.0) == -1
+
+
+def test_choose_victim_picks_largest_surplus_and_robs_stranded_work():
+    powers = np.array([10.0, 10.0, 10.0])
+    loads = np.array([50.0, 10.0, 0.0])
+    # m0 is 30 units above its fair share of 20: the obvious victim
+    assert choose_victim(loads, powers,
+                         np.array([True, True, False])) == 0
+    # nobody reachable is above fair share: nothing worth pulling
+    assert choose_victim(loads, powers,
+                         np.array([False, True, True])) == -1
+    # a powered-down member with queued work is stranded — still robbable
+    assert choose_victim(np.array([0.0, 40.0]), np.array([10.0, 0.0]),
+                         np.array([False, True])) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: the push pass continues past an oversized task
+# ---------------------------------------------------------------------------
+
+def test_push_pass_continues_past_oversized_task_to_a_movable_one(tmp_path):
+    """Regression for the ``if dst < 0: break`` bug: the 80-unit task at
+    the back of the hot member's queue fits no reachable deficit, but the
+    5-unit task ahead of it does — one migration, not zero."""
+    members = (
+        _trace_member(tmp_path, "hot",
+                      [(0.1, 40.0, 1.0), (0.2, 5.0, 1.0), (0.3, 80.0, 1.0)]),
+        _trace_member(tmp_path, "calm1", [(0.1, 50.0, 1.0)]),
+        _trace_member(tmp_path, "calm2", [(0.1, 50.0, 1.0)]),
+    )
+    fed = lab.Federation(members=members,
+                         topology=TopologySpec(kind="full", bandwidth=8.0,
+                                               latency=2.0),
+                         exchange_period=4.0, mode="lockstep")
+    frt = FederatedRuntime(fed)
+    frt.advance(until=4.0)  # exactly the first exchange
+    assert frt.stats.migrations == 1
+    assert frt.stats.rejected == 0
+    # the task that travelled is the small one, not the oversized one
+    assert list(frt._sent.values()) == [5.0]
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: eviction rows follow the task across the WAN
+# ---------------------------------------------------------------------------
+
+def test_wan_handoff_retargets_pending_evictions(tmp_path):
+    """A task handed off over the WAN takes its still-pending eviction
+    rows with it: the row after the landing fires on the new member
+    (re-targeted), the row the transfer overtakes is counted as dropped —
+    and the run still conserves every task and work unit."""
+    members = (
+        _trace_member(tmp_path, "hot",
+                      [(0.05, 100.0, 1.0), (0.1, 30.0, 4.0)]),
+        _trace_member(tmp_path, "calm", []),
+    )
+    fed = lab.Federation(members=members,
+                         topology=TopologySpec(kind="full", bandwidth=8.0,
+                                               latency=2.0),
+                         exchange_period=4.0, mode="lockstep")
+    frt = FederatedRuntime(fed)
+    # churn addressed to the queued 30-unit task (tid 1): one row the
+    # transfer overtakes (t=5 < t_land=6.5), one that must follow it
+    frt.runtimes[0].schedule_eviction(1, 5.0)
+    frt.runtimes[0].schedule_eviction(1, 20.0)
+    report = frt.run()
+    assert frt.stats.migrations == 1
+    assert frt.stats.evictions_retargeted == 1
+    assert frt.stats.evictions_dropped == 1
+    # the surviving row fired on the NEW member, mid-service: the eviction
+    # is booked there along with the work it wasted
+    m_calm = report.members[1]
+    assert m_calm.evictions == 1
+    assert m_calm.wasted_work > 0.0
+    assert report.aggregate.completed == 2
+    end = frt.work_census(1e9)
+    assert end["conservation_gap"] <= 1e-6 * max(end["admitted"], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# stealing exchange
+# ---------------------------------------------------------------------------
+
+def test_stealing_balances_skew_and_beats_isolation():
+    fed = _federation(rates=(8.0, 1.0, 1.0), exchange="stealing")
+    r = lab.run(fed, backend="federated")
+    wan = r.extras["wan"]
+    assert r["completed"] == r["arrived"]
+    assert wan["steals"] > 0
+    # under pure stealing every WAN migration is pull-initiated
+    assert wan["steals"] == wan["migrations"]
+    isolated = lab.run(fed.replace(topology=TopologySpec(kind="isolated")),
+                       backend="federated", vectorize=False)
+    assert r["mean_response"] < isolated["mean_response"]
+
+
+def test_stolen_handoffs_are_flagged_in_the_stitched_trace():
+    fed = _federation(rates=(8.0, 1.0, 1.0), exchange="stealing",
+                      members=tuple(
+                          _member(i, r, obs=lab.ObsSpec(trace=True))
+                          for i, r in enumerate((8.0, 1.0, 1.0))))
+    frt = FederatedRuntime(fed)
+    frt.run()
+    assert frt.stats.steals > 0
+    stitched = frt.stitched_trace()
+    stolen = [e for e in stitched["traceEvents"]
+              if e.get("name") == "wan_handoff"
+              and e.get("args", {}).get("stolen")]
+    # every steal leaves exactly one flagged hand-off span in the chain
+    assert len(stolen) == frt.stats.steals
+
+
+# ---------------------------------------------------------------------------
+# hierarchy: a federation member that is itself a federation
+# ---------------------------------------------------------------------------
+
+def _nested_federation() -> lab.Federation:
+    inner = lab.Federation(
+        name="region",
+        members=(_member(1, 1.0, horizon=30.0),
+                 _member(2, 1.0, horizon=30.0)),
+        topology=TopologySpec(kind="full", bandwidth=16.0, latency=1.0),
+        exchange_period=2.0)
+    return lab.Federation(
+        name="planet",
+        members=(inner, _member(0, 10.0, horizon=30.0)),
+        topology=TopologySpec(kind="full", bandwidth=8.0, latency=2.0),
+        exchange_period=4.0)
+
+
+def test_hierarchical_federation_round_trips_and_conserves():
+    fed = _nested_federation()
+    back = lab.Federation.from_json(fed.to_json())
+    assert back == fed
+    assert back.fingerprint() == fed.fingerprint()
+    assert back.members[0].is_federation
+    frt = FederatedRuntime(fed)
+    report = frt.run()
+
+    def leaves(spec):
+        for m in spec.members:
+            if getattr(m, "is_federation", False):
+                yield from leaves(m)
+            else:
+                yield m
+
+    total = sum(m.workload.materialize(m.seed).m for m in leaves(fed))
+    assert report.aggregate.completed == total
+    # the hot flat member sheds into the nested region: hand-offs crossed
+    # a federation boundary and were re-routed by the inner positional rule
+    assert frt.stats.migrations > 0
+    end = frt.work_census(1e9)
+    assert end["conservation_gap"] <= 1e-6 * max(end["admitted"], 1.0)
+
+
+def test_hierarchical_federation_runs_on_the_lab_backend():
+    fed = _nested_federation()
+    r = lab.run(fed, backend="federated")
+    assert r.backend_options["model"] == "async-events"
+    assert r["completed"] == r["arrived"]
+    # even link-free, a nested member keeps the fluid fast path off the
+    # table — the lowering has no notion of an inner federation
+    linkless = fed.replace(topology=TopologySpec(kind="isolated"))
+    with pytest.raises(lab.BackendError, match="nested federation"):
+        lab.run(linkless, backend="federated", vectorize=True)
+
+
+# ---------------------------------------------------------------------------
+# async session verbs
+# ---------------------------------------------------------------------------
+
+def test_async_partial_advance_then_drain_matches_straight_run():
+    fed = _federation()
+    frt = FederatedRuntime(fed)
+    # only the t=4 evaluation is <= 5.3; the heap stops mid-air
+    assert frt.advance(until=5.3) == 1
+    assert frt._t == pytest.approx(5.3)
+    partial = frt.drain()
+    straight = FederatedRuntime(fed).run()
+    assert partial.aggregate.summary() == straight.aggregate.summary()
+    assert partial.wan.to_dict() == straight.wan.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# registry + scrape
+# ---------------------------------------------------------------------------
+
+def test_federation_registry_merges_members_and_counts_wan():
+    fed = _federation(rates=(8.0, 1.0, 1.0), exchange="stealing",
+                      members=tuple(
+                          _member(i, r,
+                                  obs=lab.ObsSpec(probe_every=2.0,
+                                                  metrics=True))
+                          for i, r in enumerate((8.0, 1.0, 1.0))))
+    frt = FederatedRuntime(fed)
+    frt.run()
+    snap = frt.registry().snapshot()
+    assert "fed_wan_migrations_total" in snap
+    assert "fed_steals_total" in snap
+    steals = list(snap["fed_steals_total"]["samples"].values())[0]
+    assert steals == float(frt.stats.steals) > 0
+    # drained: nothing left in the air
+    inflight = list(snap["fed_wan_inflight_tasks"]["samples"].values())[0]
+    assert inflight == 0.0
+    text = frt.scrape()
+    assert 'member="m0"' in text
+    assert "fed_wan_inflight_work" in text
